@@ -1,0 +1,96 @@
+"""Framework-level persistence benchmarks (beyond-paper table).
+
+Applies the paper's policy spectrum to a real TrainState:
+fully / partly / partly+q8 / partly+drop / partly+incremental —
+bytes persisted per checkpoint and save wall time.
+"""
+from __future__ import annotations
+
+import shutil
+import tempfile
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from repro.ckpt.manager import CheckpointManager
+from repro.configs import base, registry
+from repro.core import policy as pol
+from repro.models.model import build
+from repro.optim.adamw import AdamWConfig, init_moments
+from repro.train.state import new_state
+
+POLICIES = [
+    ("fully", pol.FULLY_PERSISTENT, False),
+    ("partly", pol.PARTLY_PERSISTENT, False),
+    ("partly+q8", pol.PARTLY_Q8, False),
+    ("partly+drop", pol.PARTLY_DROP, False),
+    ("partly+incr", pol.PARTLY_PERSISTENT, True),
+]
+
+
+def ckpt_policies(arch: str = "llama3.2-3b") -> List[Dict]:
+    cfg = base.reduced(registry.get(arch))
+    # widen the reduced config so checkpoint sizes are meaningful (~40MB)
+    import dataclasses
+    cfg = dataclasses.replace(cfg, d_model=512, n_layers=4, d_ff=1024,
+                              vocab=8192)
+    model = build(cfg, compute_dtype=jnp.float32)
+    params = model.init_params(jax.random.PRNGKey(0))
+    mu, nu = init_moments(params, AdamWConfig())
+    mu = jax.tree.map(lambda x: x + 0.01, mu)   # non-trivial moments
+    st = new_state(params, mu, nu, seed=0)
+    st = st._replace(rng=jax.random.fold_in(jax.random.PRNGKey(0), 0))
+
+    rows = []
+    for name, policy, incr in POLICIES:
+        d = tempfile.mkdtemp(prefix=f"ckpt_{name.replace('+','_')}_")
+        try:
+            mgr = CheckpointManager(d, policy, incremental=incr)
+            t0 = time.perf_counter()
+            rep = mgr.save(st)
+            t_first = time.perf_counter() - t0
+            # second save (params unchanged): the incremental win
+            t0 = time.perf_counter()
+            rep2 = mgr.save(st)
+            t_second = time.perf_counter() - t0
+            rows.append({
+                "policy": name,
+                "bytes_1st": rep.bytes_written,
+                "bytes_2nd": rep2.bytes_written,
+                "skipped_derivable": rep.bytes_skipped_derivable,
+                "save_s_1st": round(t_first, 4),
+                "save_s_2nd": round(t_second, 4),
+            })
+        finally:
+            shutil.rmtree(d, ignore_errors=True)
+    base_b = rows[0]["bytes_1st"]
+    for r in rows:
+        r["vs_fully"] = f"{(1 - r['bytes_1st'] / base_b) * 100:.1f}% fewer"
+    return rows
+
+
+def restore_reconstruct(arch: str = "llama3.2-3b") -> List[Dict]:
+    """Restore-time split: read-persisted vs reconstruct-derivable."""
+    cfg = base.reduced(registry.get(arch))
+    model = build(cfg, compute_dtype=jnp.float32)
+    params = model.init_params(jax.random.PRNGKey(0))
+    mu, nu = init_moments(params, AdamWConfig())
+    st = new_state(params, mu, nu, seed=0)
+    st = st._replace(rng=jax.random.fold_in(jax.random.PRNGKey(0), 0))
+    spec = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), st)
+    rows = []
+    for name, policy, _ in POLICIES[:3]:
+        d = tempfile.mkdtemp(prefix="ckpt_r_")
+        try:
+            mgr = CheckpointManager(d, policy)
+            mgr.save(st)
+            t0 = time.perf_counter()
+            got = mgr.restore(spec)
+            rows.append({"policy": name,
+                         "restore_s": round(time.perf_counter() - t0, 4),
+                         "leaves": len(jax.tree.leaves(got))})
+        finally:
+            shutil.rmtree(d, ignore_errors=True)
+    return rows

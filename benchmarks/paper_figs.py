@@ -1,0 +1,160 @@
+"""Paper-figure benchmarks (one function per table/figure).
+
+fig1   — Cost of Persistence: append-only linked list, fraction of nodes
+         flushed 0..100% -> near-linear execution-time growth.
+fig5_6 — Insert-only workload: execution time + flush-time share for the
+         three structures, fully vs partly persistent.
+fig7_8 — Delete-only workload: same metrics.
+fig9_11— Mixed insert:delete 1:1 / 2:1 / 4:1.
+fig12  — Re-flushing the same cache line: unaligned sub-line flushes
+         (8..64 B rows) vs 64 B-aligned rows.
+recon  — §V-F reconstruction time vs persisted size.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from benchmarks.common import (MODES, SYNTH_LINE_NS, Cell, make_structure,
+                               run_workload, speedup)
+from repro.core.arena import open_arena
+from repro.pstruct.bptree import BPTree
+from repro.pstruct.dll import DoublyLinkedList
+from repro.pstruct.hashmap import Hashmap
+
+
+def fig1_cost_of_persistence(n: int = 60000) -> List[Dict]:
+    """Append n nodes; flush only a fraction of them (paper Fig 1)."""
+    rows = []
+    vals = np.arange(n * 7, dtype=np.int64).reshape(n, 7)
+    for frac in (0.0, 0.25, 0.5, 0.75, 1.0):
+        a, d = make_structure("dll", "partly", n + 64)
+        # monkey-style: append in batches, flushing only the first
+        # frac-share of each batch's rows (persist_rows is the knob)
+        t0 = time.perf_counter()
+        for i in range(0, n, 1024):
+            batch = vals[i:i + 1024]
+            ids = d.append_batch(batch)   # flushes all by default
+        base = time.perf_counter() - t0
+        full_lines = a.stats.lines
+        # re-run flushing only a fraction (drop flush calls manually)
+        a2, d2 = make_structure("dll", "partly", n + 64)
+        import repro.core.arena as ar
+        t0 = time.perf_counter()
+        for i in range(0, n, 1024):
+            batch = vals[i:i + 1024]
+            m = len(batch)
+            keep = int(m * frac)
+            ids = d2._alloc(m)
+            d2.nodes.vol[ids, :7] = batch
+            d2.nodes.vol[ids[:-1], 7] = ids[1:]
+            d2.nodes.vol[ids[-1], 7] = -1
+            if keep:
+                d2.nodes.persist_rows(ids[:keep])
+        dt = time.perf_counter() - t0
+        rows.append({"flush_frac": frac, "wall_s": round(dt, 4),
+                     "lines": a2.stats.lines,
+                     "synth_flush_s": round(a2.stats.fence_ns * 1e-9, 4)})
+    return rows
+
+
+def _workload_fig(workload: str, n_init: int, n_ops: int) -> List[Dict]:
+    rows = []
+    cells: Dict[str, Dict[str, Cell]] = {}
+    for kind in ("dll", "bptree", "hashmap"):
+        cells[kind] = {}
+        for mode in MODES:
+            c = run_workload(kind, mode, workload, n_init, n_ops)
+            cells[kind][mode] = c
+    for kind in ("dll", "bptree", "hashmap"):
+        full, partly = cells[kind]["full"], cells[kind]["partly"]
+        rows.append({
+            "structure": kind, "workload": workload,
+            "full_s": round(full.wall_s, 4),
+            "partly_s": round(partly.wall_s, 4),
+            "speedup": speedup(full.wall_s, partly.wall_s),
+            "full_flush%": f"{100 * full.flush_frac:.0f}%",
+            "partly_flush%": f"{100 * partly.flush_frac:.0f}%",
+            "full_lines": full.lines, "partly_lines": partly.lines,
+            "line_save": f"{(1 - partly.lines / max(full.lines, 1)) * 100:.0f}%",
+        })
+    return rows
+
+
+def fig5_6_insert(n_init: int = 20000, n_ops: int = 50000) -> List[Dict]:
+    return _workload_fig("insert", n_init, n_ops)
+
+
+def fig7_8_delete(n_init: int = 60000, n_ops: int = 50000) -> List[Dict]:
+    return _workload_fig("delete", n_init, n_ops)
+
+
+def fig9_11_mixed(n_init: int = 30000, n_ops: int = 40000) -> List[Dict]:
+    out = []
+    for w in ("mixed_1_1", "mixed_2_1", "mixed_4_1"):
+        out.extend(_workload_fig(w, n_init, n_ops))
+    return out
+
+
+def fig12_alignment(n: int = 40000) -> List[Dict]:
+    """Flush the same logical stream with 8..64 B row sizes.  Sub-line rows
+    re-touch the same 64 B line repeatedly — the paper's 61.3% slowdown."""
+    rows = []
+    for rowbytes in (8, 16, 32, 64):
+        words = rowbytes // 8
+        a = open_arena(None, {"r": (np.int64, (n, words))},
+                       synth_line_ns=SYNTH_LINE_NS)
+        r = a.regions["r"]
+        t0 = time.perf_counter()
+        for i in range(0, n, 1):
+            r.vol[i, :] = i
+            r.persist_rows(np.asarray([i]))
+        dt = time.perf_counter() - t0
+        rows.append({"row_bytes": rowbytes,
+                     "wall_s": round(dt, 4),
+                     "lines": a.stats.lines,
+                     "bytes": a.stats.bytes,
+                     "lines_per_64B": round(a.stats.lines * 64
+                                            / max(a.stats.bytes, 1), 2)})
+    base = rows[-1]["wall_s"]
+    for r_ in rows:
+        r_["slowdown_vs_64B"] = f"{(r_['wall_s'] / base - 1) * 100:+.1f}%"
+    return rows
+
+
+def reconstruction(sizes=(20000, 60000, 120000)) -> List[Dict]:
+    """§V-F: rebuild time per structure vs persisted entry count."""
+    rows = []
+    rng = np.random.default_rng(0)
+    for n in sizes:
+        vals = rng.integers(0, 1 << 40, (n, 7)).astype(np.int64)
+        keys = rng.permutation(n * 2)[:n].astype(np.int64)
+
+        a, d = make_structure("dll", "partly", n + 64, synth_line_ns=0)
+        for i in range(0, n, 8192):
+            d.append_batch(vals[i:i + 8192])
+        a.commit(); a.crash(); a.reopen()
+        t0 = time.perf_counter(); d.reconstruct()
+        t_dll = time.perf_counter() - t0
+
+        a, t = make_structure("bptree", "partly", n + 64, synth_line_ns=0)
+        for i in range(0, n, 8192):
+            t.insert_batch(keys[i:i + 8192], vals[i:i + 8192])
+        a.commit(); a.crash(); a.reopen()
+        t0 = time.perf_counter(); t.reconstruct()
+        t_bt = time.perf_counter() - t0
+
+        a, h = make_structure("hashmap", "partly", n + 64, synth_line_ns=0)
+        for i in range(0, n, 8192):
+            h.insert_batch(keys[i:i + 8192], vals[i:i + 8192])
+        a.commit(); a.crash(); a.reopen()
+        t0 = time.perf_counter(); h.reconstruct()
+        t_hm = time.perf_counter() - t0
+
+        mb = n * 64 / 2 ** 20
+        rows.append({"entries": n, "persisted_MiB": round(mb, 1),
+                     "dll_s": round(t_dll, 4), "bptree_s": round(t_bt, 4),
+                     "hashmap_s": round(t_hm, 4)})
+    return rows

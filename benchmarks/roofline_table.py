@@ -1,0 +1,81 @@
+"""Render the §Roofline tables from results/dryrun.json (+ baseline).
+
+    PYTHONPATH=src python -m benchmarks.roofline_table [--append]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+from benchmarks.common import fmt_table
+
+
+def load(path):
+    if not os.path.exists(path):
+        return []
+    with open(path) as f:
+        return json.load(f)
+
+
+def rows_for(cells, mesh):
+    rows = []
+    for r in cells:
+        if r.get("mesh") != mesh:
+            continue
+        if r.get("status") != "ok":
+            rows.append({"arch": r["arch"], "shape": r["shape"],
+                         "hbm_GiB": "--", "fits": "--",
+                         "compute_s": "--", "memory_s": "--",
+                         "collective_s": "--",
+                         "dominant": r.get("status", "?")[:30],
+                         "mfu": "--", "useful": "--"})
+            continue
+        t, fl, m = r["terms"], r["flops"], r["memory"]
+        rows.append({
+            "arch": r["arch"], "shape": r["shape"],
+            "hbm_GiB": round(m["total_hbm_bytes"] / 2**30, 2),
+            "fits": "Y" if m["fits_v5e_16g"] else "N",
+            "compute_s": round(t["compute_s"], 3),
+            "memory_s": round(t["memory_s"], 3),
+            "collective_s": round(t["collective_s"], 3),
+            "dominant": t["dominant"],
+            "mfu": round(fl["mfu_at_roofline"], 4),
+            "useful": round(fl["useful_ratio"], 3),
+        })
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--append", action="store_true",
+                    help="append tables to EXPERIMENTS.md")
+    args = ap.parse_args()
+    cur = load("results/dryrun.json")
+    base = load("results/dryrun_baseline.json")
+
+    out = []
+    for mesh, title in (("16x16", "single-pod 16x16 (256 chips)"),
+                        ("2x16x16", "multi-pod 2x16x16 (512 chips)")):
+        rows = rows_for(cur, mesh)
+        if rows:
+            out.append(f"\n### Optimized — {title}\n")
+            out.append("```")
+            out.append(fmt_table(rows, list(rows[0])))
+            out.append("```")
+    if base:
+        rows = rows_for(base, "16x16")
+        if rows:
+            out.append("\n### Baseline (pre-§Perf) — single-pod 16x16\n")
+            out.append("```")
+            out.append(fmt_table(rows, list(rows[0])))
+            out.append("```")
+    text = "\n".join(out)
+    print(text)
+    if args.append:
+        with open("EXPERIMENTS.md", "a") as f:
+            f.write("\n" + text + "\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,103 @@
+"""Benchmark harness entry: ``PYTHONPATH=src python -m benchmarks.run``.
+
+One section per paper table/figure (paper_figs), the framework-level
+checkpoint-policy table (ckpt_bench), and the dry-run roofline summary
+(reads results/dryrun.json if the sweep has been run).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+from benchmarks import ckpt_bench, paper_figs
+from benchmarks.common import fmt_table
+
+
+def section(title):
+    print(f"\n{'=' * 72}\n{title}\n{'=' * 72}")
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller workloads (CI)")
+    ap.add_argument("--out", default="results/bench.json")
+    args = ap.parse_args()
+    q = args.quick
+    results = {}
+    t0 = time.perf_counter()
+
+    section("Fig 1 — Cost of Persistence (append-only DLL, flush fraction)")
+    rows = paper_figs.fig1_cost_of_persistence(20000 if q else 60000)
+    results["fig1"] = rows
+    print(fmt_table(rows, list(rows[0])))
+    print("(expect: near-linear wall-time growth in flushed lines)")
+
+    section("Fig 5/6 — Insert-only: execution time + flush share")
+    rows = paper_figs.fig5_6_insert(*((5000, 12000) if q else (20000, 50000)))
+    results["fig5_6"] = rows
+    print(fmt_table(rows, list(rows[0])))
+
+    section("Fig 7/8 — Delete-only")
+    rows = paper_figs.fig7_8_delete(*((15000, 12000) if q else (60000, 50000)))
+    results["fig7_8"] = rows
+    print(fmt_table(rows, list(rows[0])))
+
+    section("Fig 9-11 — Mixed insert:delete (1:1, 2:1, 4:1)")
+    rows = paper_figs.fig9_11_mixed(*((8000, 10000) if q else (30000, 40000)))
+    results["fig9_11"] = rows
+    print(fmt_table(rows, list(rows[0])))
+
+    section("Fig 12 — Re-flushing the same cache line (alignment)")
+    rows = paper_figs.fig12_alignment(8000 if q else 40000)
+    results["fig12"] = rows
+    print(fmt_table(rows, list(rows[0])))
+
+    section("§V-F — Reconstruction time vs persisted size")
+    rows = paper_figs.reconstruction((5000, 20000) if q
+                                     else (20000, 60000, 120000))
+    results["reconstruction"] = rows
+    print(fmt_table(rows, list(rows[0])))
+
+    section("Checkpoint policies on a TrainState (framework level)")
+    rows = ckpt_bench.ckpt_policies()
+    results["ckpt_policies"] = rows
+    print(fmt_table(rows, list(rows[0])))
+
+    section("Restore + reconstruction split")
+    rows = ckpt_bench.restore_reconstruct()
+    results["restore"] = rows
+    print(fmt_table(rows, list(rows[0])))
+
+    dry = "results/dryrun.json"
+    if os.path.exists(dry):
+        section("Dry-run roofline summary (from results/dryrun.json)")
+        with open(dry) as f:
+            cells = json.load(f)
+        rows = []
+        for r in cells:
+            if r.get("status") != "ok":
+                continue
+            rows.append({
+                "arch": r["arch"], "shape": r["shape"], "mesh": r["mesh"],
+                "hbm_GiB": round(r["memory"]["total_hbm_bytes"] / 2**30, 2),
+                "fits": "Y" if r["memory"]["fits_v5e_16g"] else "N",
+                "dominant": r["terms"]["dominant"],
+                "step_s": round(r["terms"]["step_s"], 3),
+                "mfu": round(r["flops"]["mfu_at_roofline"], 4),
+            })
+        results["dryrun_summary"] = rows
+        print(fmt_table(rows, list(rows[0])))
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(results, f, indent=1)
+    print(f"\nall benchmarks done in {time.perf_counter() - t0:.1f}s "
+          f"-> {args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,73 @@
+"""Lower + compile ONE production cell and print its roofline terms.
+
+A minimal, readable version of launch/dryrun.py for exploring a single
+(arch x shape x mesh) combination:
+
+    PYTHONPATH=src python examples/dryrun_one_cell.py \
+        --arch gemma3-27b --shape train_4k --multi-pod
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse  # noqa: E402
+
+import jax  # noqa: E402
+
+from repro import roofline as rl  # noqa: E402
+from repro.configs import base, registry  # noqa: E402
+from repro.launch.mesh import POD_SIZE, make_production_mesh  # noqa: E402
+from repro.launch.specs import build_cell  # noqa: E402
+from repro.models import accounting  # noqa: E402
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma2-9b")
+    ap.add_argument("--shape", default="train_4k",
+                    choices=list(base.SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    args = ap.parse_args()
+
+    cfg = registry.get(args.arch)
+    shape = base.SHAPES[args.shape]
+    ok, why = registry.cell_supported(cfg, shape)
+    if not ok:
+        print(f"cell not supported: {why}")
+        return
+
+    mesh = make_production_mesh(multi_pod=args.multi_pod)
+    print(f"mesh: {dict(mesh.shape)} ({mesh.devices.size} devices)")
+    cell = build_cell(cfg, shape, mesh)
+    print(f"kind={cell.kind} fsdp={cell.fsdp} tokens/step={cell.n_tokens}")
+
+    with mesh:
+        compiled = (jax.jit(cell.fn, in_shardings=cell.in_shardings,
+                            donate_argnums=cell.donate)
+                    .lower(*cell.arg_specs).compile())
+
+    mem = rl.memory_stats(compiled)
+    print(f"\nper-device HBM: {mem['total_hbm_bytes'] / 2**30:.2f} GiB "
+          f"(args {mem['argument_size_in_bytes'] / 2**30:.2f} + temp "
+          f"{mem['temp_size_in_bytes'] / 2**30:.2f} - aliased "
+          f"{mem['alias_size_in_bytes'] / 2**30:.2f}) "
+          f"fits v5e: {mem['fits_v5e_16g']}")
+
+    mf = accounting.model_flops(cfg, cell.n_tokens, cell.training)
+    roof = rl.analyze(compiled, n_devices=mesh.devices.size,
+                      pod_size=POD_SIZE if args.multi_pod else 1 << 30,
+                      model_flops=mf)
+    print(f"\nroofline terms (s/step/device @ TPU v5e):")
+    print(f"  compute    {roof.compute_s:10.4f}   "
+          f"({roof.dot_flops:.3e} dot FLOPs)")
+    print(f"  memory     {roof.memory_s:10.4f}   "
+          f"({roof.hbm_bytes:.3e} HBM bytes)")
+    print(f"  collective {roof.collective_s:10.4f}   "
+          f"({roof.coll_bytes:.3e} ICI B + {roof.coll_bytes_dcn:.3e} DCN B)")
+    print(f"  dominant:  {roof.dominant};  step >= {roof.step_seconds:.4f}s")
+    print(f"  MODEL_FLOPS/HLO_FLOPS = {roof.useful_flops_ratio:.3f}; "
+          f"MFU at roofline = {roof.mfu:.4f}")
+    print(f"  collective ops: {roof.coll_ops}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,63 @@
+"""Quickstart: the paper's technique in 60 lines.
+
+Builds each of the three partly-persistent structures, runs a workload,
+crashes, reconstructs, and prints the flush savings vs fully-persistent.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.core.arena import open_arena
+from repro.pstruct.bptree import BPTree
+from repro.pstruct.dll import DoublyLinkedList
+from repro.pstruct.hashmap import Hashmap
+
+rng = np.random.default_rng(0)
+N = 20000
+
+
+def demo(kind):
+    lines = {}
+    for mode in ("full", "partly"):
+        if kind == "dll":
+            a = open_arena(None, DoublyLinkedList.layout(N + 64, mode))
+            s = DoublyLinkedList(a, N + 64, mode)
+        elif kind == "bptree":
+            a = open_arena(None, BPTree.layout(N, N * 2, mode))
+            s = BPTree(a, N, N * 2, mode)
+        else:
+            a = open_arena(None, Hashmap.layout(N + 64, mode))
+            s = Hashmap(a, N + 64, mode)
+
+        keys = rng.permutation(N).astype(np.int64)
+        vals = rng.integers(0, 1 << 40, (N, 7)).astype(np.int64)
+        for i in range(0, N, 1024):
+            if kind == "dll":
+                s.append_batch(vals[i:i + 1024])
+            else:
+                s.insert_batch(keys[i:i + 1024], vals[i:i + 1024])
+        a.commit()
+        lines[mode] = a.stats.lines
+
+        if mode == "partly":
+            # ---- crash: volatile state gone; reconstruct from essentials
+            a.crash()
+            a.reopen()
+            s.reconstruct()
+            if kind == "dll":
+                assert s.count == N
+            else:
+                ok, got = (s.find_batch(keys))
+                assert ok.all() and (got == vals).all()
+    save = (1 - lines["partly"] / lines["full"]) * 100
+    print(f"{kind:8s}  fully={lines['full']:8d} lines   "
+          f"partly={lines['partly']:8d} lines   saved={save:.0f}%   "
+          f"(crash+reconstruct verified)")
+
+
+if __name__ == "__main__":
+    print(f"inserting {N} entries into each structure, both modes:\n")
+    for kind in ("dll", "bptree", "hashmap"):
+        demo(kind)
+    print("\nDon't persist all: only the essential fields hit the arena; "
+          "redundancy is rebuilt on restart.")

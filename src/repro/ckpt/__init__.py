@@ -1,0 +1,2 @@
+from repro.ckpt.manager import CheckpointManager, SaveReport  # noqa: F401
+from repro.ckpt.manifest import CheckpointCatalog  # noqa: F401

@@ -1,0 +1,230 @@
+"""Checkpoint manager: persistence policies applied to TrainState.
+
+The paper's discipline, end to end:
+
+* plan: classify every leaf (core.policy) — ESSENTIAL / DERIVABLE /
+  APPROXIMABLE — and compute the flush plan (bytes to persist).
+* flush: device->host gather of persisted leaves, optional int8
+  block-quantization of APPROXIMABLE leaves (kernels.quant_pack), one file
+  per leaf shard, written by a background thread (async checkpointing —
+  compute/persist overlap).
+* commit protocol: leaf files are fully written and fsync'd BEFORE the
+  manifest is atomically renamed into place (manifest-last = the paper's
+  flag bit; a crash mid-write leaves the previous checkpoint valid).
+* restore: read manifest, load+dequantize persisted leaves, RECONSTRUCT
+  every DERIVABLE leaf (rng, pipeline cursor, schedule) via
+  core.reconstruct, re-warm dropped moments, and device_put with the
+  *target* mesh's shardings — restoring onto a different mesh (elastic
+  scaling) is the same code path.
+* incremental mode (beyond paper): leaves whose content digest is unchanged
+  since the previous checkpoint are skipped ("don't persist what didn't
+  change") — frozen embeddings/stubs cost zero bytes per step.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import shutil
+import threading
+import time
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import policy as pol
+from repro.core import reconstruct as rec
+from repro.kernels import ops as kops
+from repro.train.state import TrainState
+
+PyTree = Any
+
+
+@dataclasses.dataclass
+class SaveReport:
+    step: int
+    bytes_written: int
+    bytes_skipped_derivable: int
+    bytes_skipped_unchanged: int
+    n_leaves_written: int
+    seconds: float
+    quantized: bool
+
+
+def _leaf_file(path_str: str) -> str:
+    h = hashlib.md5(path_str.encode()).hexdigest()[:16]
+    return f"leaf_{h}.npz"
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, policy: pol.PersistPolicy,
+                 incremental: bool = False, use_pack_kernel: bool = False):
+        self.dir = directory
+        self.policy = policy
+        self.incremental = incremental
+        self.use_pack_kernel = use_pack_kernel
+        os.makedirs(directory, exist_ok=True)
+        self._writer: Optional[threading.Thread] = None
+        self._last_digests: Dict[str, str] = {}
+        self.last_report: Optional[SaveReport] = None
+
+    # ------------------------------------------------------------------ save
+    def save(self, state: TrainState, blocking: bool = True) -> SaveReport:
+        t0 = time.perf_counter()
+        self.wait()
+        sd = state.as_dict()
+        plans = pol.plan(sd, self.policy)
+        leaves = {pol.path_str(p): l for p, l in
+                  jax.tree_util.tree_flatten_with_path(sd)[0]}
+
+        to_write: Dict[str, Tuple[np.ndarray, dict]] = {}
+        bytes_written = 0
+        bytes_skipped_deriv = 0
+        bytes_skipped_unchanged = 0
+        quantized_any = False
+        manifest: Dict[str, Any] = {"step": int(jax.device_get(state.step)),
+                                    "policy": self.policy.name,
+                                    "approx": self.policy.approx,
+                                    "leaves": {}}
+
+        for p in plans:
+            leaf = leaves[p.path]
+            raw_bytes = int(np.prod(p.shape or (1,))) * np.dtype(p.dtype).itemsize
+            if not p.persisted:
+                bytes_skipped_deriv += raw_bytes
+                continue
+            entry = {"shape": list(p.shape), "dtype": str(np.dtype(p.dtype)),
+                     "kind": p.kind.value, "file": _leaf_file(p.path),
+                     "quantized": False}
+            if p.quantized and np.issubdtype(np.dtype(p.dtype), np.floating):
+                q, s = kops.quantize_leaf(leaf)
+                host = {"q": np.asarray(q), "s": np.asarray(s)}
+                entry["quantized"] = True
+                quantized_any = True
+                nbytes = host["q"].nbytes + host["s"].nbytes
+            else:
+                host = {"x": np.asarray(jax.device_get(leaf))}
+                nbytes = host["x"].nbytes
+            digest = hashlib.md5(
+                b"".join(v.tobytes() for v in host.values())).hexdigest()
+            entry["digest"] = digest
+            if (self.incremental
+                    and self._last_digests.get(p.path) == digest
+                    and os.path.exists(os.path.join(self.dir, entry["file"]))):
+                bytes_skipped_unchanged += nbytes
+                manifest["leaves"][p.path] = entry
+                continue
+            to_write[p.path] = (host, entry)
+            manifest["leaves"][p.path] = entry
+            bytes_written += nbytes
+            self._last_digests[p.path] = digest
+
+        def write():
+            for path, (host, entry) in to_write.items():
+                fp = os.path.join(self.dir, entry["file"])
+                with open(fp + ".tmp", "wb") as f:
+                    np.savez(f, **host)
+                    f.flush()
+                    os.fsync(f.fileno())
+                os.replace(fp + ".tmp", fp)
+            # manifest-last commit (the paper's flag bit)
+            mtmp = os.path.join(self.dir, "manifest.json.tmp")
+            with open(mtmp, "w") as f:
+                json.dump(manifest, f)
+                f.flush()
+                os.fsync(f.fileno())
+            os.replace(mtmp, os.path.join(self.dir, "manifest.json"))
+
+        if blocking:
+            write()
+        else:
+            self._writer = threading.Thread(target=write, daemon=True)
+            self._writer.start()
+
+        report = SaveReport(
+            step=manifest["step"], bytes_written=bytes_written,
+            bytes_skipped_derivable=bytes_skipped_deriv,
+            bytes_skipped_unchanged=bytes_skipped_unchanged,
+            n_leaves_written=len(to_write),
+            seconds=time.perf_counter() - t0, quantized=quantized_any)
+        self.last_report = report
+        return report
+
+    def wait(self) -> None:
+        if self._writer is not None:
+            self._writer.join()
+            self._writer = None
+
+    # --------------------------------------------------------------- restore
+    def valid(self) -> bool:
+        return os.path.exists(os.path.join(self.dir, "manifest.json"))
+
+    def restore(self, state_spec: TrainState,
+                shardings: Optional[PyTree] = None) -> TrainState:
+        """state_spec: a TrainState of ShapeDtypeStructs (or arrays) giving
+        the target structure; shardings: matching NamedSharding pytree (or
+        None for single-device).  DERIVABLE leaves are reconstructed, not
+        read."""
+        self.wait()
+        with open(os.path.join(self.dir, "manifest.json")) as f:
+            manifest = json.load(f)
+        sd = state_spec._asdict()
+        flat, treedef = jax.tree_util.tree_flatten_with_path(sd)
+        sflat = jax.tree.leaves(shardings) if shardings is not None \
+            else [None] * len(flat)
+        step = manifest["step"]
+        seed = None
+        # first pass: essential scalars we need for reconstruction
+        for pth, spec in flat:
+            if pol.path_str(pth) == "data_seed":
+                ent = manifest["leaves"].get("data_seed")
+                if ent is not None:
+                    seed = int(self._load_leaf(ent, (), np.int32))
+        if seed is None:
+            seed = 0
+
+        out = []
+        for (pth, spec), shard in zip(flat, sflat):
+            pstr = pol.path_str(pth)
+            kind = pol.classify(pth, self.policy.rules)
+            ent = manifest["leaves"].get(pstr)
+            shape = tuple(getattr(spec, "shape", ()))
+            dtype = getattr(spec, "dtype", np.float32)
+            if ent is not None:
+                arr = self._load_leaf(ent, shape, dtype)
+            elif kind == pol.Kind.DERIVABLE:
+                arr = self._reconstruct_leaf(pstr, seed, step, shape, dtype)
+            elif kind == pol.Kind.APPROXIMABLE:
+                # drop policy: re-warm from zeros (bias correction restarts
+                # cleanly because update() corrects with the global step)
+                arr = np.zeros(shape, dtype)
+            else:
+                raise KeyError(f"essential leaf {pstr} missing from checkpoint")
+            if shard is not None:
+                arr = jax.device_put(arr, shard)
+            else:
+                arr = jnp.asarray(arr)
+            out.append(arr)
+        sd_new = jax.tree.unflatten(treedef, out)
+        return TrainState(**sd_new)
+
+    def _load_leaf(self, entry: dict, shape, dtype) -> np.ndarray:
+        with np.load(os.path.join(self.dir, entry["file"])) as z:
+            if entry.get("quantized"):
+                q, s = z["q"], z["s"]
+                return np.asarray(kops.dequantize_leaf(
+                    jnp.asarray(q), jnp.asarray(s), tuple(entry["shape"]),
+                    np.dtype(entry["dtype"])))
+            return z["x"].reshape(shape).astype(dtype, copy=False)
+
+    def _reconstruct_leaf(self, pstr: str, seed: int, step: int, shape,
+                          dtype) -> np.ndarray:
+        if pstr == "rng":
+            key, _ = rec.run("rng", seed, step)
+            return np.asarray(key)
+        # unknown derivable leaves default to zeros (caches, cursors held
+        # host-side are rebuilt by their owners)
+        return np.zeros(shape, dtype)

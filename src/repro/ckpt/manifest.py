@@ -1,0 +1,67 @@
+"""Checkpoint catalog: a partly-persistent B+Tree over checkpoint history.
+
+Maps step -> (generation, bytes, n_leaves) across a training run — the
+framework-level manifest workload for the paper's B+Tree (leaves persisted,
+inner levels rebuilt on open).  Survives crashes with the same commit
+protocol as the checkpoints it catalogs.
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional, Tuple
+
+import numpy as np
+
+from repro.core.arena import open_arena
+from repro.pstruct.bptree import BPTree
+
+
+class CheckpointCatalog:
+    def __init__(self, path: Optional[str], capacity: int = 4096,
+                 mode: str = "partly"):
+        cap_nodes = max(64, capacity // 4)
+        exists = path is not None and os.path.exists(path)
+        self.arena = open_arena(
+            path, BPTree.layout(cap_nodes, capacity, mode, name="cat"))
+        self.tree = BPTree(self.arena, cap_nodes, capacity, mode, name="cat")
+        if exists and self.arena.header_valid():
+            self.tree.reconstruct()
+
+    def record(self, step: int, generation: int, nbytes: int,
+               n_leaves: int) -> None:
+        vals = np.zeros((1, 7), np.int64)
+        vals[0, :3] = [generation, nbytes, n_leaves]
+        self.tree.insert_batch(np.array([step], np.int64), vals)
+        self.arena.commit()
+
+    def latest(self) -> Optional[Tuple[int, int, int, int]]:
+        hv = self.tree.header.vol[0]
+        if hv[3] == 0:  # H_COUNT
+            return None
+        # walk to the right-most leaf via descent on +inf
+        ok, vals = self.tree.find_batch(np.array([self._max_key()], np.int64))
+        key = self._max_key()
+        return (key, int(vals[0, 0]), int(vals[0, 1]), int(vals[0, 2]))
+
+    def _max_key(self) -> int:
+        import repro.pstruct.bptree as bt
+        cur = int(self.tree.header.vol[0, bt.H_FIRST_LEAF])
+        last = None
+        while cur != bt.NULL:
+            row = self.tree.nodes.vol[cur]
+            nk = int(row[bt.C_NK])
+            if nk:
+                last = int(row[bt.K0 + nk - 1])
+            cur = int(row[bt.C_NEXT])
+        return last
+
+    def steps(self) -> np.ndarray:
+        import repro.pstruct.bptree as bt
+        out = []
+        cur = int(self.tree.header.vol[0, bt.H_FIRST_LEAF])
+        while cur != bt.NULL:
+            row = self.tree.nodes.vol[cur]
+            nk = int(row[bt.C_NK])
+            out.extend(row[bt.K0:bt.K0 + nk].tolist())
+            cur = int(row[bt.C_NEXT])
+        return np.asarray(out, np.int64)

@@ -1,0 +1,11 @@
+from repro.configs.base import (  # noqa: F401
+    ALL_SHAPES,
+    ArchConfig,
+    MoEConfig,
+    SSMConfig,
+    ShapeSpec,
+    SHAPES,
+    XLSTMConfig,
+    reduced,
+)
+from repro.configs.registry import ARCHS, all_cells, cell_supported, get  # noqa: F401

@@ -1,0 +1,16 @@
+"""The paper's primary contribution: partly-persistent state management —
+field classification, flush planning/accounting, persistent arena with
+commit protocol, and the reconstruction engine."""
+from repro.core.arena import LINE, Arena, FlushStats, open_arena  # noqa: F401
+from repro.core.policy import (  # noqa: F401
+    FULLY_PERSISTENT,
+    Kind,
+    PARTLY_DROP,
+    PARTLY_PERSISTENT,
+    PARTLY_Q8,
+    PersistPolicy,
+    classify,
+    persisted_bytes,
+    plan,
+)
+from repro.core import reconstruct  # noqa: F401

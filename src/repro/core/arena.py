@@ -1,0 +1,245 @@
+"""Persistent arena: the framework's "persistent memory".
+
+The paper operates data structures in volatile memory and treats each
+explicit flush as a checkpoint of the *essential* fields into persistent
+memory (Optane, mmap'd with MAP_SYNC).  Our TPU-cluster analogue (DESIGN.md
+§2) is a host-side file-backed arena:
+
+* every region has a VOLATILE numpy array (the working copy — the "DRAM/HBM"
+  side) and a PERSISTENT np.memmap view of a backing file;
+* ``persist_rows`` / ``persist_range`` copy selected rows from volatile to
+  persistent and account the cost in *flush units* — 64-byte "cache lines"
+  by default, with adjacent dirty lines coalesced, exactly mirroring the
+  paper's clwb accounting (§V-E: unaligned/partial-line flushes re-fetch
+  whole lines, so cost is counted in whole lines touched);
+* a commit protocol orders data before metadata: ``commit()`` flushes the
+  backing file and only then sets the header's valid flag (the paper's
+  "flag bit" + NVTree-style manifest-last ordering);
+* ``reopen()`` simulates the post-crash restart: all volatile state is
+  discarded and regions are reloaded from the file.
+
+Byte/line counters are exact and medium-independent; wall-clock cost on this
+CPU host is the real memcpy+write cost, which scales linearly in flushed
+bytes (reproducing Fig 1's linearity).  An optional synthetic per-line
+latency models Optane-like flush stalls for experiments that want the
+paper's regime explicitly.
+"""
+from __future__ import annotations
+
+import json
+import os
+import struct
+import time
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+LINE = 64                 # flush granularity (bytes) — paper's cache line
+MEDIA_GRAIN = 256         # DCPMM internal granularity (§IV-D bucket sizing)
+
+_MAGIC = b"RPRA"
+_HDR_FMT = "<4sQQ?7x"     # magic, n_regions, generation, valid flag
+
+
+@dataclass
+class FlushStats:
+    lines: int = 0
+    bytes: int = 0
+    calls: int = 0
+    fence_ns: int = 0      # synthetic latency accumulated (if enabled)
+
+    def snapshot(self) -> "FlushStats":
+        return FlushStats(self.lines, self.bytes, self.calls, self.fence_ns)
+
+    def delta(self, since: "FlushStats") -> "FlushStats":
+        return FlushStats(self.lines - since.lines, self.bytes - since.bytes,
+                          self.calls - since.calls,
+                          self.fence_ns - since.fence_ns)
+
+
+class Region:
+    """A named, row-structured persistent region."""
+
+    def __init__(self, arena: "Arena", name: str, dtype, shape: Tuple[int, ...],
+                 offset: int):
+        self.arena = arena
+        self.name = name
+        self.dtype = np.dtype(dtype)
+        self.shape = tuple(shape)
+        self.offset = offset
+        self.rowbytes = int(self.dtype.itemsize * np.prod(shape[1:], dtype=np.int64)) \
+            if len(shape) > 1 else self.dtype.itemsize
+        self.nbytes = self.rowbytes * shape[0]
+        # Volatile working copy.
+        self.vol = np.zeros(self.shape, self.dtype)
+
+    # -- persistence ------------------------------------------------------
+    def _pview(self) -> np.ndarray:
+        mm = self.arena._mm
+        flat = np.frombuffer(mm, dtype=np.uint8,
+                             count=self.nbytes, offset=self.offset)
+        return flat.view(self.dtype).reshape(self.shape)
+
+    def persist_rows(self, rows: np.ndarray) -> None:
+        """Flush the given row indices (volatile -> persistent)."""
+        rows = np.asarray(rows, np.int64)
+        if rows.size == 0:
+            return
+        rows = np.unique(rows)
+        pv = self._pview()
+        pv[rows] = self.vol[rows]
+        self.arena._account_rows(self.offset, self.rowbytes, rows)
+
+    def persist_range(self, lo: int, hi: int) -> None:
+        if hi <= lo:
+            return
+        pv = self._pview()
+        pv[lo:hi] = self.vol[lo:hi]
+        self.arena._account_range(self.offset + lo * self.rowbytes,
+                                  (hi - lo) * self.rowbytes)
+
+    def persist_all(self) -> None:
+        self.persist_range(0, self.shape[0])
+
+    def load(self) -> None:
+        """Reload volatile copy from persistent memory (post-crash)."""
+        self.vol = np.array(self._pview())
+
+
+class Arena:
+    """File-backed persistent arena with flush accounting."""
+
+    def __init__(self, path: Optional[str], synth_line_ns: float = 0.0):
+        self.path = path
+        self.regions: Dict[str, Region] = {}
+        self.stats = FlushStats()
+        self.synth_line_ns = synth_line_ns
+        self._layout_final = False
+        self._mm: Optional[np.memmap] = None
+        self._cursor = 4096  # header page
+        self._meta: Dict[str, dict] = {}
+        self.generation = 0
+
+    # -- layout -----------------------------------------------------------
+    def region(self, name: str, dtype, shape: Tuple[int, ...]) -> Region:
+        assert not self._layout_final, "layout already finalized"
+        assert name not in self.regions
+        # Row-align every region to LINE so a row flush never straddles an
+        # unrelated region (paper: __attribute__((aligned(64)))).
+        self._cursor = _align(self._cursor, LINE)
+        r = Region(self, name, dtype, shape, self._cursor)
+        self._cursor += _align(r.nbytes, LINE)
+        self.regions[name] = r
+        self._meta[name] = {"dtype": np.dtype(dtype).str,
+                            "shape": list(shape), "offset": r.offset}
+        return r
+
+    def finalize(self) -> None:
+        assert not self._layout_final
+        self._layout_final = True
+        total = _align(self._cursor, 4096)
+        if self.path is None:
+            self._mm = np.zeros(total, np.uint8)  # in-memory (tests)
+        else:
+            create = not os.path.exists(self.path)
+            if create:
+                with open(self.path, "wb") as f:
+                    f.truncate(total)
+            self._mm = np.memmap(self.path, dtype=np.uint8, mode="r+",
+                                 shape=(total,))
+            if create:
+                self._write_header(valid=False)
+        # sidecar layout description (tiny, metadata-only)
+        if self.path is not None:
+            with open(self.path + ".layout", "w") as f:
+                json.dump(self._meta, f)
+
+    # -- header / commit protocol -----------------------------------------
+    def _write_header(self, valid: bool) -> None:
+        hdr = struct.pack(_HDR_FMT, _MAGIC, len(self.regions),
+                          self.generation, valid)
+        self._mm[: len(hdr)] = np.frombuffer(hdr, np.uint8)
+
+    def header_valid(self) -> bool:
+        raw = bytes(self._mm[: struct.calcsize(_HDR_FMT)])
+        magic, _, gen, valid = struct.unpack(_HDR_FMT, raw)
+        return magic == _MAGIC and bool(valid)
+
+    def commit(self) -> None:
+        """Data-before-metadata ordering: flush file contents, then set the
+        valid flag (the paper's initialization flag bit)."""
+        if isinstance(self._mm, np.memmap):
+            self._mm.flush()
+        self.generation += 1
+        self._write_header(valid=True)
+        if isinstance(self._mm, np.memmap):
+            self._mm.flush()
+        self.stats.calls += 1
+
+    def invalidate(self) -> None:
+        self._write_header(valid=False)
+
+    # -- crash simulation ---------------------------------------------------
+    def crash(self) -> None:
+        """Discard all volatile state (keep the backing file)."""
+        for r in self.regions.values():
+            r.vol = np.zeros(r.shape, r.dtype)
+
+    def reopen(self) -> None:
+        """Reload every region's volatile copy from persistent memory."""
+        for r in self.regions.values():
+            r.load()
+
+    # -- accounting ---------------------------------------------------------
+    def _account_range(self, byte_off: int, nbytes: int) -> None:
+        lo = (byte_off // LINE) * LINE
+        hi = _align(byte_off + nbytes, LINE)
+        lines = (hi - lo) // LINE
+        self.stats.lines += lines
+        self.stats.bytes += nbytes
+        self.stats.calls += 1
+        self._synth(lines)
+
+    def _account_rows(self, base: int, rowbytes: int, rows: np.ndarray) -> None:
+        if rowbytes % LINE == 0 and base % LINE == 0:
+            # aligned rows: rows * rowbytes/LINE lines, coalescing irrelevant
+            lines = int(rows.size) * (rowbytes // LINE)
+        else:
+            # exact distinct-line count over sorted row intervals (adjacent
+            # rows may share a line — the Fig-12 unaligned-flush effect)
+            starts = (base + rows * rowbytes) // LINE
+            ends = (base + (rows + 1) * rowbytes - 1) // LINE
+            starts = np.maximum(starts,
+                                np.concatenate(([-1], ends[:-1])) + 1)
+            lines = int(np.sum(np.maximum(0, ends - starts + 1)))
+        self.stats.lines += lines
+        self.stats.bytes += int(rows.size) * rowbytes
+        self.stats.calls += 1
+        self._synth(lines)
+
+    def _synth(self, lines: int) -> None:
+        if self.synth_line_ns:
+            ns = int(lines * self.synth_line_ns)
+            self.stats.fence_ns += ns
+            t0 = time.perf_counter_ns()
+            while time.perf_counter_ns() - t0 < ns:
+                pass
+
+    def close(self) -> None:
+        if isinstance(self._mm, np.memmap):
+            self._mm.flush()
+        self._mm = None
+
+
+def _align(x: int, a: int) -> int:
+    return ((x + a - 1) // a) * a
+
+
+def open_arena(path: Optional[str], layout: Dict[str, Tuple], **kw) -> Arena:
+    """Create/open an arena with the given {name: (dtype, shape)} layout."""
+    a = Arena(path, **kw)
+    for name, (dtype, shape) in layout.items():
+        a.region(name, dtype, shape)
+    a.finalize()
+    return a

@@ -1,0 +1,58 @@
+"""Reconstruction engine: registry of per-structure rebuild functions.
+
+The restore path walks the state spec; every DERIVABLE leaf/subsystem names
+a reconstructor which rebuilds it from essential state — the generalization
+of the paper's three per-structure reconstruction algorithms (§IV-*3).
+Reconstructors must be *pure* given (essential_state, static config): same
+inputs => identical rebuilt state, which the crash tests assert.
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Callable, Dict, Tuple
+
+_REGISTRY: Dict[str, Callable[..., Any]] = {}
+
+
+def register(name: str):
+    def deco(fn):
+        _REGISTRY[name] = fn
+        return fn
+    return deco
+
+
+def get(name: str) -> Callable[..., Any]:
+    return _REGISTRY[name]
+
+
+def names() -> Tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def run(name: str, *args, **kw):
+    """Run a reconstructor, returning (result, seconds) for §V-F style
+    reconstruction-time reporting."""
+    t0 = time.perf_counter()
+    out = _REGISTRY[name](*args, **kw)
+    return out, time.perf_counter() - t0
+
+
+# -- built-in trainer-state reconstructors ---------------------------------
+
+@register("rng")
+def rebuild_rng(seed: int, step: int):
+    import jax
+    key = jax.random.PRNGKey(seed)
+    return jax.random.fold_in(key, step)
+
+
+@register("schedule")
+def rebuild_schedule(step: int, schedule_fn):
+    # LR schedules are pure functions of step; their "state" is just memo
+    return schedule_fn(step)
+
+
+@register("pipeline_cursor")
+def rebuild_pipeline_cursor(seed: int, step: int, global_batch: int):
+    # deterministic pipeline: cursor is a pure function of (seed, step)
+    return {"seed": seed, "next_index": step * global_batch}

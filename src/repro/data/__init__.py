@@ -1,0 +1,2 @@
+from repro.data.pipeline import Pipeline  # noqa: F401
+from repro.data.index import SampleIndex  # noqa: F401

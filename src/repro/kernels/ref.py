@@ -1,0 +1,66 @@
+"""Pure-jnp oracles for every Pallas kernel (allclose targets in tests)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.quant_pack import GROUP
+from repro.kernels.hash_probe import BUCKET
+
+
+def pack_rows_ref(src: jax.Array, idx: jax.Array) -> jax.Array:
+    valid = idx >= 0
+    safe = jnp.where(valid, idx, 0)
+    rows = src[safe]
+    return jnp.where(valid[:, None], rows, jnp.zeros_like(rows))
+
+
+def scatter_rows_ref(dst: jax.Array, packed: jax.Array,
+                     idx: jax.Array) -> jax.Array:
+    n = dst.shape[0]
+    valid = idx >= 0
+    oob = jnp.where(valid, idx, n)
+    return dst.at[oob].set(packed, mode="drop")
+
+
+def quantize_blockwise_ref(x: jax.Array):
+    n, d = x.shape
+    g = x.astype(jnp.float32).reshape(n, d // GROUP, GROUP)
+    absmax = jnp.max(jnp.abs(g), axis=-1, keepdims=True)
+    scale = jnp.maximum(absmax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q.reshape(n, d), scale[..., 0].astype(jnp.float32)
+
+
+def dequantize_blockwise_ref(q: jax.Array, scales: jax.Array,
+                             dtype=jnp.float32) -> jax.Array:
+    n, d = q.shape
+    g = q.reshape(n, d // GROUP, GROUP).astype(jnp.float32)
+    out = g * scales[..., None]
+    return out.reshape(n, d).astype(dtype)
+
+
+def probe_ref(keys_table: jax.Array, queries: jax.Array,
+              bucket_ids: jax.Array) -> jax.Array:
+    rows = keys_table[bucket_ids]                      # (Q, BUCKET)
+    hit = rows == queries[:, None]
+    lane = jnp.argmax(hit, axis=1)
+    found = hit.any(axis=1)
+    return jnp.where(found, bucket_ids * BUCKET + lane, -1).astype(jnp.int32)
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True, scale=None) -> jax.Array:
+    """O(S^2) oracle for flash_attention.  q: (H, Sq, D); k,v: (H, Skv, D)."""
+    h, sq, d = q.shape
+    skv = k.shape[1]
+    scale = scale if scale is not None else d ** -0.5
+    s = jnp.einsum("hqd,hkd->hqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if causal:
+        qpos = jnp.arange(sq)[:, None]
+        kpos = jnp.arange(skv)[None, :]
+        s = jnp.where(qpos >= kpos, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("hqk,hkd->hqd", p, v.astype(jnp.float32))
+    return o.astype(q.dtype)

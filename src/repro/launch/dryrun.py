@@ -1,0 +1,164 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any other import (including repro.*):
+# jax locks the device count at first init, and the production dry-run
+# needs 512 placeholder devices to build the 16x16 and 2x16x16 meshes.
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this proves, without hardware:
+  * the sharding config is coherent (GSPMD partitions every op; uneven
+    shardings / unsupported collectives fail here),
+  * it fits per-device HBM (compiled.memory_analysis()),
+  * and it yields the roofline terms (repro.roofline on the post-SPMD HLO
+    + cost_analysis) recorded in EXPERIMENTS.md.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun                  # all cells
+  PYTHONPATH=src python -m repro.launch.dryrun --arch gemma2-9b \
+      --shape train_4k --mesh multi
+  PYTHONPATH=src python -m repro.launch.dryrun --out results/dryrun.json
+"""
+import argparse
+import json
+import time
+import traceback
+from typing import Any, Dict
+
+import jax
+
+from repro import roofline as rl
+from repro.configs import base, registry
+from repro.launch.mesh import POD_SIZE, make_production_mesh
+from repro.launch.specs import build_cell
+
+
+def run_cell(cfg, shape, mesh, multi_pod: bool) -> Dict[str, Any]:
+    from repro.models import accounting
+
+    t0 = time.perf_counter()
+    cell = build_cell(cfg, shape, mesh)
+    with mesh:
+        kw = {}
+        if cell.out_shardings is not None:
+            kw["out_shardings"] = cell.out_shardings
+        jitted = jax.jit(cell.fn, in_shardings=cell.in_shardings,
+                         donate_argnums=cell.donate, **kw)
+        lowered = jitted.lower(*cell.arg_specs)
+        t_lower = time.perf_counter() - t0
+        compiled = lowered.compile()
+        t_compile = time.perf_counter() - t0 - t_lower
+
+    n_dev = mesh.devices.size
+    mem = rl.memory_stats(compiled)
+    model_flops = accounting.model_flops(cfg, cell.n_tokens, cell.training)
+    roof = rl.analyze(compiled, n_devices=n_dev,
+                      pod_size=POD_SIZE if multi_pod else 1 << 30,
+                      model_flops=model_flops)
+    print(compiled.memory_analysis())
+
+    return {
+        "arch": cfg.name, "shape": shape.name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "kind": cell.kind, "fsdp": cell.fsdp,
+        "status": "ok",
+        "n_devices": n_dev,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "memory": mem,
+        "terms": {
+            "compute_s": roof.compute_s,
+            "memory_s": roof.memory_s,
+            "collective_s": roof.collective_s,
+            "dominant": roof.dominant,
+            "step_s": roof.step_seconds,
+        },
+        "flops": {
+            "hlo_dot_flops_per_dev": roof.dot_flops,
+            "model_flops_global": roof.model_flops,
+            "useful_ratio": roof.useful_flops_ratio,
+            "mfu_at_roofline": roof.mfu,
+            "raw_cost_analysis_flops": roof.raw_cost_flops,
+        },
+        "bytes": {
+            "hbm_per_dev": roof.hbm_bytes,
+            "collective_ici": roof.coll_bytes,
+            "collective_dcn": roof.coll_bytes_dcn,
+            "raw_cost_analysis_bytes": roof.raw_cost_bytes,
+        },
+        "collective_ops": roof.coll_ops,
+    }
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="results/dryrun.json")
+    ap.add_argument("--fail-fast", action="store_true")
+    args = ap.parse_args()
+
+    archs = list(registry.ARCHS) if args.arch == "all" else [args.arch]
+    shapes = list(base.SHAPES) if args.shape == "all" else [args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    results = []
+    if os.path.exists(args.out):
+        with open(args.out) as f:
+            results = json.load(f)
+    done = {(r["arch"], r["shape"], r["mesh"]) for r in results
+            if r.get("status") == "ok"}
+
+    n_fail = 0
+    for multi in meshes:
+        mesh = make_production_mesh(multi_pod=multi)
+        mname = "2x16x16" if multi else "16x16"
+        for arch in archs:
+            cfg = registry.get(arch)
+            for sname in shapes:
+                shape = base.SHAPES[sname]
+                key = (cfg.name, shape.name, mname)
+                if key in done:
+                    print(f"[skip-done] {key}")
+                    continue
+                ok, why = registry.cell_supported(cfg, shape)
+                if not ok:
+                    rec = {"arch": cfg.name, "shape": shape.name,
+                           "mesh": mname, "status": why}
+                    print(f"[{why}] {cfg.name} x {shape.name}")
+                else:
+                    print(f"[dryrun] {cfg.name} x {shape.name} x {mname} ...",
+                          flush=True)
+                    try:
+                        rec = run_cell(cfg, shape, mesh, multi)
+                        t = rec["terms"]
+                        print(f"  ok: compile={rec['compile_s']:.1f}s "
+                              f"hbm/dev={rec['memory']['total_hbm_bytes']/2**30:.2f}GiB "
+                              f"compute={t['compute_s']*1e3:.2f}ms "
+                              f"memory={t['memory_s']*1e3:.2f}ms "
+                              f"coll={t['collective_s']*1e3:.2f}ms "
+                              f"dom={t['dominant']}", flush=True)
+                    except Exception as e:
+                        n_fail += 1
+                        rec = {"arch": cfg.name, "shape": shape.name,
+                               "mesh": mname, "status": "FAIL",
+                               "error": f"{type(e).__name__}: {e}"}
+                        print(f"  FAIL {type(e).__name__}: {e}")
+                        traceback.print_exc()
+                        if args.fail_fast:
+                            raise
+                results = [r for r in results
+                           if (r["arch"], r["shape"], r["mesh"]) != key]
+                results.append(rec)
+                with open(args.out, "w") as f:
+                    json.dump(results, f, indent=1)
+    print(f"\n{len(results)} cells recorded, {n_fail} failures "
+          f"-> {args.out}")
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

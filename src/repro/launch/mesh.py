@@ -1,0 +1,24 @@
+"""Production mesh construction.
+
+A FUNCTION, not a module-level constant: importing this module never
+touches jax device state (device count is locked at first jax init, and
+smoke tests must see 1 CPU device while the dry-run sees 512 placeholders).
+"""
+from __future__ import annotations
+
+import jax
+
+SINGLE_POD = (16, 16)                 # 256 chips (v5e pod slice)
+MULTI_POD = (2, 16, 16)               # 2 pods = 512 chips
+POD_SIZE = 256
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Degenerate 1x1 mesh over the real local device (smoke tests)."""
+    return jax.make_mesh((1, 1), ("data", "model"))

@@ -1,0 +1,68 @@
+"""Serving launcher: ``python -m repro.launch.serve --arch <id>``.
+
+Boots the ServingEngine (paged-KV DLL allocator + request hashmap, both
+partly persistent), serves batched greedy decode for synthetic requests,
+then demonstrates the crash/recover path: all device + volatile host
+state is dropped and rebuilt from the persistent arena (token log replay
+re-prefills every live request).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import base, registry
+from repro.models.model import build
+from repro.serve.engine import EngineConfig, ServingEngine
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=list(registry.ARCHS))
+    ap.add_argument("--requests", type=int, default=4)
+    ap.add_argument("--steps", type=int, default=8)
+    ap.add_argument("--s-max", type=int, default=64)
+    ap.add_argument("--arena", default="/tmp/repro_serve_arena")
+    ap.add_argument("--crash", action="store_true",
+                    help="crash mid-serve and recover")
+    args = ap.parse_args()
+
+    cfg = base.reduced(registry.get(args.arch))
+    model = build(cfg, compute_dtype=jnp.float32)
+    params = model.init_params(jax.random.PRNGKey(0))
+    eng = ServingEngine(model, params,
+                        EngineConfig(max_batch=args.requests,
+                                     s_max=args.s_max,
+                                     max_requests=4 * args.requests),
+                        arena_path=args.arena)
+
+    rng = np.random.default_rng(0)
+    for rid in range(args.requests):
+        prompt = rng.integers(1, cfg.vocab, rng.integers(3, 9))
+        eng.add_request(100 + rid, prompt.astype(np.int64))
+        print(f"[serve] request {100 + rid}: prompt={prompt.tolist()}")
+
+    for step in range(args.steps // 2):
+        out = eng.step()
+        print(f"[serve] step {step}: {out}")
+
+    if args.crash:
+        print("[serve] CRASH — dropping device caches + volatile tables")
+        eng.crash()
+        t = eng.recover()
+        print(f"[serve] recovered in {t:.3f}s (hashmap reconstructed, "
+              f"LRU chain rebuilt, KV re-prefilled from token log)")
+
+    for step in range(args.steps // 2, args.steps):
+        out = eng.step()
+        print(f"[serve] step {step}: {out}")
+    print(f"[serve] flush stats: {eng.arena.stats}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,219 @@
+"""ShapeDtypeStruct stand-ins + sharding assembly for every dry-run cell.
+
+``input_specs(cfg, shape)`` returns weak-type-correct, shardable,
+zero-allocation stand-ins for every model input of the cell:
+
+* train cells   -> {tokens, labels[, frames|context]} for ``train_step``
+* prefill cells -> the same request batch for ``prefill``
+* decode cells  -> (cache, tokens(B,), pos) for ``serve_step`` — one new
+  token against a KV cache of seq_len, per the assignment.
+
+``build_cell`` assembles (fn, arg_specs, in_shardings) so launch/dryrun.py
+can ``jax.jit(fn, in_shardings=...).lower(*specs).compile()``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeSpec
+from repro.dist import mesh as dmesh
+from repro.models.model import Model, build
+from repro.optim.adamw import AdamWConfig
+from repro.optim.schedule import WarmupCosine
+from repro.train.state import TrainState
+from repro.train.step import build_train_step
+
+PyTree = Any
+
+# Per-arch training knobs for the production mesh (memory-driven):
+# microbatches splits the per-step batch to bound live activations
+# (the saved-residual stack of the layer scan scales with per-microbatch
+# tokens); "fsdp" forces ZeRO-3 param sharding on archs below the
+# automatic >5B threshold whose replicated attention weights would
+# otherwise blow the budget; the moment dtype drops to bf16 only where
+# f32 moments cannot fit 16 GB HBM (llama4-400b: 400B * 12B / 256 chips
+# = 18.8 GB > 16 GB even fully sharded — DESIGN.md §5).
+TRAIN_KNOBS: Dict[str, Dict[str, Any]] = {
+    "llama3.2-3b": {"microbatches": 2, "fsdp": True},
+    "gemma2-9b": {"microbatches": 2},
+    "gemma3-27b": {"microbatches": 8},
+    "phi3-medium-14b": {"microbatches": 4},
+    "llama-3.2-vision-90b": {"microbatches": 8},
+    "whisper-large-v3": {"microbatches": 2},
+    "dbrx-132b": {"microbatches": 4},
+    # fsdp_pod=True was tried and REFUTED (§Perf log L4-5): spanning the
+    # pod axis moves 3.6 TB of param all-gathers onto 6.25 GB/s DCN links
+    # (collective 529 -> 636 s) while activations still exceed HBM.
+    # llama4-400b with an f32 master + moments is a 1024-chip model on
+    # v5e; both assigned meshes are reported over-budget honestly.
+    "llama4-maverick-400b-a17b": {"microbatches": 8,
+                                  "moment_dtype": "bfloat16"},
+    "hymba-1.5b": {"microbatches": 8},
+    "xlstm-1.3b": {"microbatches": 4},
+}
+
+
+def train_knobs(cfg: ArchConfig) -> Dict[str, Any]:
+    return {"microbatches": 1, "moment_dtype": "float32", "fsdp": None,
+            "fsdp_pod": False, **TRAIN_KNOBS.get(cfg.name, {})}
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeSpec,
+                compute_dtype=jnp.bfloat16) -> Dict[str, jax.ShapeDtypeStruct]:
+    """Data-batch stand-ins (train/prefill).  Decode adds cache/pos via
+    decode_specs."""
+    b, s = shape.global_batch, shape.seq_len
+    if shape.is_decode:
+        return {"tokens": jax.ShapeDtypeStruct((b,), jnp.int32)}
+    model = build(cfg, compute_dtype=compute_dtype)
+    spec = model.batch_spec(b, s)
+    if shape.kind != "train":
+        spec.pop("labels", None)
+    return spec
+
+
+def _sds(tree: PyTree, dtype=None) -> PyTree:
+    def f(x):
+        dt = dtype or x.dtype
+        return jax.ShapeDtypeStruct(x.shape, dt)
+    return jax.tree.map(f, tree)
+
+
+def state_specs(model: Model, moment_dtype: str) -> TrainState:
+    params = model.param_specs()
+    mdt = np.dtype(moment_dtype)
+    moments = jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, mdt), params)
+    return TrainState(
+        params=params, mu=moments, nu=moments,
+        step=jax.ShapeDtypeStruct((), jnp.int32),
+        data_seed=jax.ShapeDtypeStruct((), jnp.int32),
+        rng=jax.ShapeDtypeStruct((2,), jnp.uint32),
+    )
+
+
+@dataclasses.dataclass
+class Cell:
+    fn: Callable
+    arg_specs: Tuple
+    in_shardings: Tuple
+    kind: str                  # train | prefill | decode
+    n_tokens: int              # tokens processed per step (decode: B)
+    training: bool
+    fsdp: bool
+    donate: Tuple[int, ...] = ()
+    out_shardings: Any = None  # None = compiler-chosen
+
+
+def build_cell(cfg: ArchConfig, shape: ShapeSpec, mesh: Mesh,
+               fsdp: Optional[bool] = None,
+               compute_dtype=jnp.bfloat16) -> Cell:
+    from repro.models import moe as moe_mod
+
+    model = build(cfg, compute_dtype=compute_dtype)
+    knobs = train_knobs(cfg)
+    if fsdp is None:
+        fsdp = dmesh.use_fsdp(cfg)
+        if shape.kind == "train" and knobs["fsdp"] is not None:
+            fsdp = knobs["fsdp"]
+    # FSDP spans the pod axis only where per-chip optimizer state demands
+    # it (llama4-400b; see dist.mesh.set_fsdp_axes).
+    if (shape.kind == "train" and knobs["fsdp_pod"]
+            and "pod" in mesh.axis_names):
+        dmesh.set_fsdp_axes(("pod", "data"))
+    else:
+        dmesh.set_fsdp_axes("data")
+    # bf16 row-parallel reduces for distributed cells (§Perf).
+    from repro.models import layers as L
+    L.LOWP_ROW_REDUCE["on"] = True
+    pps = dmesh.param_pspecs(cfg, fsdp)
+    to_sh = lambda t: dmesh.to_shardings(mesh, t)
+    scalar = dmesh.scalar_sharding(mesh)
+    dp = dmesh.dp_axes(mesh)
+    b, s = shape.global_batch, shape.seq_len
+    batch_shardable = dmesh._dp_divides(mesh, b)
+    bdim = dp if batch_shardable else None
+
+    if cfg.moe is not None:
+        # Expert-parallel constraint: dispatched (B, E, C, d) activations
+        # shard experts over "model" (GSPMD inserts the token all-to-alls).
+        moe_mod.set_sharding(
+            dispatch=NamedSharding(mesh, P(bdim, "model", None, None)),
+            out=NamedSharding(mesh, P(bdim, None, None)))
+    else:
+        moe_mod.set_sharding(None, None)
+    # Seed batch-parallel activation propagation (critical under FSDP).
+    dmesh.set_activation_sharding(
+        NamedSharding(mesh, P(bdim, None, None)))
+    # Sequence-parallel attention for archs whose heads can't shard over
+    # the 16-way model axis (see dist.mesh.SEQ_PARALLEL).
+    if (not dmesh.attn_head_shardable(cfg) and shape.kind != "decode"
+            and cfg.family in ("dense", "moe", "vlm", "audio", "hybrid")):
+        dmesh.set_seq_parallel(
+            q=NamedSharding(mesh, P(bdim, "model", None)),
+            kv=NamedSharding(mesh, P(bdim, None, None, None)),
+            res=NamedSharding(mesh, P(bdim, None, None)))
+    else:
+        dmesh.set_seq_parallel(None, None, None)
+
+    if shape.kind == "train":
+        knobs = train_knobs(cfg)
+        opt = AdamWConfig(moment_dtype=knobs["moment_dtype"])
+        sched = WarmupCosine(total_steps=10000)
+        step_fn = build_train_step(
+            model, opt, sched,
+            microbatches=knobs["microbatches"],
+            grad_sync_dtype=knobs.get("grad_sync_dtype", "bfloat16"),
+            param_shardings=to_sh(pps))
+        st_specs = state_specs(model, knobs["moment_dtype"])
+        batch = input_specs(cfg, shape, compute_dtype)
+        st_sh = TrainState(
+            params=to_sh(pps), mu=to_sh(pps), nu=to_sh(pps),
+            step=scalar, data_seed=scalar, rng=scalar)
+        b_sh = to_sh(dmesh.batch_pspecs(cfg, mesh, b))
+        # keep labels sharding only for present keys
+        b_sh = {k: v for k, v in b_sh.items() if k in batch}
+        return Cell(step_fn, (st_specs, batch), (st_sh, b_sh), "train",
+                    n_tokens=b * s, training=True, fsdp=fsdp,
+                    donate=(0,))
+
+    params = _sds(model.param_specs(), compute_dtype)  # bf16 serving weights
+    p_sh = to_sh(pps)
+
+    if shape.kind == "prefill":
+        batch = input_specs(cfg, shape, compute_dtype)
+        b_sh = {k: v for k, v in
+                to_sh(dmesh.batch_pspecs(cfg, mesh, b)).items()
+                if k in batch}
+
+        def prefill_fn(p, bt):
+            return model.prefill(p, bt, s_max=s)
+
+        # The emitted KV cache must leave the step SHARDED (batch over
+        # data, kv-heads/head_dim over model) — without an explicit
+        # out_sharding the compiler's propagation leaves the 32k cache
+        # closer to replicated and the cell overflows 16 GiB.
+        return Cell(prefill_fn, (params, batch), (p_sh, b_sh), "prefill",
+                    n_tokens=b * s, training=False, fsdp=fsdp,
+                    out_shardings=(NamedSharding(mesh, P(bdim, "model")),
+                                   to_sh(dmesh.cache_pspecs(cfg, mesh, b))))
+
+    # decode: one token against a seq_len cache
+    cache = model.cache_specs(b, s)
+    c_sh = to_sh(dmesh.cache_pspecs(cfg, mesh, b))
+    tok = jax.ShapeDtypeStruct((b,), jnp.int32)
+    tok_sh = NamedSharding(mesh, P(bdim))
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+
+    def decode_fn(p, c, t, pz):
+        return model.decode_step(p, c, t, pz)
+
+    return Cell(decode_fn, (params, cache, tok, pos),
+                (p_sh, c_sh, tok_sh, scalar), "decode",
+                n_tokens=b, training=False, fsdp=fsdp, donate=(1,))

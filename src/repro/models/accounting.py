@@ -1,0 +1,77 @@
+"""Analytical parameter / useful-FLOP accounting.
+
+Used for the §Roofline MODEL_FLOPS / HLO_FLOPs ratio.  Convention (documented
+here, consumed by EXPERIMENTS.md):
+
+* ``param_count`` is exact — it sums the leaves of the *implemented*
+  parameter pytree (so padding, gates, norms are all included).
+* ``MODEL_FLOPS = 6 * N * D`` for training (fwd 2ND + bwd 4ND) and
+  ``2 * N * D`` for inference, where N excludes the input embedding table
+  (a gather, not a matmul) but **includes** the LM head matmul once
+  (Vp * d), tied or not, and for MoE counts only *active* expert
+  parameters (top_k / n_experts of routed weights + shared experts).
+* Attention O(S^2) score/value FLOPs are intentionally excluded from
+  MODEL_FLOPS (the 6ND convention); they appear in HLO_FLOPs, so the
+  reported ratio > 1 for long sequences is expected and is itself a useful
+  signal (it quantifies quadratic-attention + remat overhead).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+
+from repro.configs.base import ArchConfig
+
+
+def _leaf_size(spec) -> int:
+    return int(np.prod(spec.shape)) if spec.shape else 1
+
+
+def param_count(cfg: ArchConfig) -> int:
+    from repro.models import backbone as B
+
+    specs = B.param_specs(cfg)
+    return sum(_leaf_size(s) for s in jax.tree.leaves(specs))
+
+
+def active_param_count(cfg: ArchConfig) -> int:
+    """Parameters touched per token (MoE: routed experts scaled by k/E)."""
+    from repro.models import backbone as B
+
+    specs = B.param_specs(cfg)
+    total = 0
+
+    def visit(path, spec):
+        nonlocal total
+        keys = [str(getattr(k, "key", getattr(k, "name", "")))
+                for k in path]
+        size = _leaf_size(spec)
+        if cfg.moe is not None and any(k in ("w_gate", "w_up", "w_down")
+                                       for k in keys) and "moe" in keys:
+            size = int(size * cfg.moe.top_k / cfg.moe.n_experts)
+        total += size
+
+    jax.tree_util.tree_map_with_path(visit, specs)
+    return total
+
+
+def matmul_param_count(cfg: ArchConfig, active: bool = True) -> int:
+    """N for the 6ND formula: active params, minus the embedding gather,
+    plus the head matmul if embeddings are tied (untied lm_head is already
+    a parameter leaf)."""
+    n = active_param_count(cfg) if active else param_count(cfg)
+    n -= cfg.vocab_padded * cfg.d_model          # embedding gather
+    if cfg.tie_embeddings:
+        n += cfg.vocab_padded * cfg.d_model      # tied head matmul
+    return n
+
+
+def model_flops_per_token(cfg: ArchConfig, seq_len: int, training: bool) -> float:
+    n = matmul_param_count(cfg, active=True)
+    return (6.0 if training else 2.0) * n
+
+
+def model_flops(cfg: ArchConfig, n_tokens: int, training: bool) -> float:
+    return model_flops_per_token(cfg, 0, training) * n_tokens

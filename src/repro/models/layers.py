@@ -1,0 +1,341 @@
+"""Core transformer layers: norms, RoPE, gated MLPs, blockwise attention.
+
+Attention design notes (TPU adaptation):
+
+* Prefill/train attention is *blockwise* with an online-softmax scan over KV
+  blocks (the splash-attention pattern): memory is O(q_block * kv_block)
+  instead of O(S^2).
+* The causal schedule is **statically triangular**: a Python loop over query
+  blocks, each scanning only its KV prefix.  This keeps compiled HLO FLOPs
+  equal to the true triangular cost (no 2x masked-waste), which matters for
+  honest roofline accounting at 32k prefill.
+* Sliding-window layers slice the banded KV range per query block with a
+  *static* slice (python ints), so local attention costs O(S*W) exactly.
+* Decode uses direct softmax over the cache; sliding-window decode uses a
+  ring buffer whose absolute slot positions are derived from `pos` (no
+  stored position tensor needed).
+
+All matmuls accumulate in f32 (`preferred_element_type`), activations are
+bf16 by default.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+Array = jax.Array
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x: Array, gamma: Array, eps: float = 1e-6) -> Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * lax.rsqrt(var + eps)
+    return (y * (1.0 + gamma.astype(jnp.float32))).astype(dt)
+
+
+def layer_norm(x: Array, gamma: Array, beta: Array, eps: float = 1e-5) -> Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * lax.rsqrt(var + eps)
+    return (y * gamma.astype(jnp.float32) + beta.astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float) -> Array:
+    """(head_dim//2,) inverse frequencies, f32."""
+    exponents = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta ** exponents)
+
+
+def apply_rope(x: Array, positions: Array, theta: float) -> Array:
+    """Rotate-half RoPE.  x: (..., S, ..., head_dim) with positions (..., S)
+    broadcastable against x's sequence axis; here we require
+    x: (B, S, N, D) [or (B, S, N, G, D)] and positions: (S,) or (B, S)."""
+    d = x.shape[-1]
+    inv = rope_freqs(d, theta)                     # (d/2,)
+    pos = positions.astype(jnp.float32)
+    ang = pos[..., None] * inv                     # (..., S, d/2)
+    # Broadcast angles over head axes between S and D.
+    extra = x.ndim - ang.ndim - 1
+    for _ in range(extra):
+        ang = ang[..., None, :]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Gated MLP (SwiGLU / GeGLU)
+# ---------------------------------------------------------------------------
+
+
+def act_fn(name: str):
+    return {"silu": jax.nn.silu, "gelu": functools.partial(jax.nn.gelu, approximate=True)}[name]
+
+
+def gated_mlp(x: Array, w_gate: Array, w_up: Array, w_down: Array, act: str) -> Array:
+    """x: (..., d).  w_gate/w_up: (d, f); w_down: (f, d)."""
+    dt = x.dtype
+    g = jnp.einsum("...d,df->...f", x, w_gate.astype(dt),
+                   preferred_element_type=_row_reduce_dtype(dt))
+    u = jnp.einsum("...d,df->...f", x, w_up.astype(dt),
+                   preferred_element_type=_row_reduce_dtype(dt))
+    h = (act_fn(act)(g) * u).astype(dt)
+    return jnp.einsum("...f,fd->...d", h, w_down.astype(dt),
+                      preferred_element_type=_row_reduce_dtype(dt)
+                      ).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+# §Perf: emit row-parallel matmul outputs (attn O-projection, MLP down-
+# projection, MoE down-projection) at the compute dtype instead of f32.
+# GSPMD inserts the cross-shard partial-sum all-reduce directly on the dot
+# output, so a bf16 output halves the dominant TP activation-reduce bytes
+# (gemma3 train: 37.6 s -> ~19 s collective).  MXU accumulation is f32
+# internally either way; the cross-device add happens in bf16 (standard
+# Megatron practice).  Off by default (bitwise-f32 baseline); enabled by
+# launch/specs.build_cell for distributed cells.
+LOWP_ROW_REDUCE = {"on": False}
+
+
+def _row_reduce_dtype(dt):
+    return dt if LOWP_ROW_REDUCE["on"] else jnp.float32
+
+
+def _softcap(scores: Array, cap: float) -> Array:
+    if cap and cap > 0.0:
+        return cap * jnp.tanh(scores / cap)
+    return scores
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnParams:
+    """Weight bundle for one attention mixer (arrays may be batched by a
+    leading superblock dim before being sliced by scan)."""
+    wq: Array        # (d, H, Dh)
+    wk: Array        # (d, K, Dh)
+    wv: Array        # (d, K, Dh)
+    wo: Array        # (H, Dh, d)
+    q_norm: Optional[Array] = None   # (Dh,) gemma3 qk-norm
+    k_norm: Optional[Array] = None
+
+
+def project_qkv(x: Array, p: AttnParams, n_kv: int, *, positions: Array,
+                theta: float, qk_norm_eps: float = 1e-6,
+                use_rope: bool = True) -> Tuple[Array, Array, Array]:
+    """x: (B, S, d) -> q: (B, S, K, G, Dh); k, v: (B, S, K, Dh)."""
+    dt = x.dtype
+    pref = _row_reduce_dtype(dt)
+    q = jnp.einsum("bsd,dhe->bshe", x, p.wq.astype(dt),
+                   preferred_element_type=pref).astype(dt)
+    k = jnp.einsum("bsd,dke->bske", x, p.wk.astype(dt),
+                   preferred_element_type=pref).astype(dt)
+    v = jnp.einsum("bsd,dke->bske", x, p.wv.astype(dt),
+                   preferred_element_type=pref).astype(dt)
+    if p.q_norm is not None:
+        q = rms_norm(q, p.q_norm, qk_norm_eps)
+        k = rms_norm(k, p.k_norm, qk_norm_eps)
+    if use_rope:
+        q = apply_rope(q, positions, theta)
+        k = apply_rope(k, positions, theta)
+    b, s, h, e = q.shape
+    g = h // n_kv
+    q = q.reshape(b, s, n_kv, g, e)
+    return q, k, v
+
+
+def _online_softmax_block(carry, q, k_blk, v_blk, mask, softcap):
+    """One KV block of streaming attention.
+
+    q: (B, K, G, Sq, Dh); k_blk/v_blk: (B, Skv, K, Dh);
+    mask: (Sq, Skv) or None (True = attend); carry: (m, l, acc).
+    """
+    m_prev, l_prev, acc_prev = carry
+    s = jnp.einsum("bkgqd,bjkd->bkgqj", q, k_blk,
+                   preferred_element_type=jnp.float32)
+    s = _softcap(s, softcap)
+    if mask is not None:
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+    m_cur = jnp.max(s, axis=-1)
+    m_new = jnp.maximum(m_prev, m_cur)
+    # Re-scale previous accumulator.
+    scale = jnp.exp(m_prev - m_new)
+    # Guard fully-masked blocks: exp(NEG_INF - NEG_INF) would be 1.
+    p = jnp.where(s > 0.5 * NEG_INF, jnp.exp(s - m_new[..., None]), 0.0)
+    l_new = l_prev * scale + jnp.sum(p, axis=-1)
+    pv = jnp.einsum("bkgqj,bjkd->bkgqd", p.astype(v_blk.dtype), v_blk,
+                    preferred_element_type=jnp.float32)
+    acc_new = acc_prev * scale[..., None] + pv
+    return m_new, l_new, acc_new
+
+
+def _finish(m, l, acc, dtype):
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.astype(dtype)  # (B, K, G, Sq, Dh)
+
+
+def blockwise_attention(q: Array, k: Array, v: Array, *, causal: bool,
+                        window: int = 0, softcap: float = 0.0,
+                        q_block: int = 1024, kv_block: int = 1024,
+                        scale: Optional[float] = None) -> Array:
+    """Streaming-softmax attention.
+
+    q: (B, S, K, G, Dh); k, v: (B, Skv, K, Dh).  Returns (B, S, K, G, Dh).
+
+    causal=True  -> static triangular schedule over query blocks.
+    window>0     -> additionally banded: query block i only reads the KV
+                    slice [i*qb - window, (i+1)*qb)  (static slice).
+    causal=False -> full bidirectional / cross attention.
+    """
+    b, s, n_kv, g, dh = q.shape
+    skv = k.shape[1]
+    scale = scale if scale is not None else 1.0 / math.sqrt(dh)
+    q = (q * scale).astype(q.dtype)
+
+    qb = min(q_block, s)
+    if s % qb:
+        qb = s  # tiny/odd sequences: single block
+    n_qb = s // qb
+    # (B, K, G, S, Dh) layout for the inner loops.
+    qt = q.transpose(0, 2, 3, 1, 4)
+
+    out_blocks = []
+    for i in range(n_qb):
+        q_i = lax.slice_in_dim(qt, i * qb, (i + 1) * qb, axis=3)
+        q_pos0 = i * qb
+        if causal:
+            lo = max(0, q_pos0 - window + 1) if window else 0
+            lo = (lo // kv_block) * kv_block
+            hi = min(skv, (i + 1) * qb)
+        else:
+            lo, hi = 0, skv
+        k_i = lax.slice_in_dim(k, lo, hi, axis=1)
+        v_i = lax.slice_in_dim(v, lo, hi, axis=1)
+        span = hi - lo
+        kb = min(kv_block, span)
+        m0 = jnp.full((b, n_kv, g, qb), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, n_kv, g, qb), jnp.float32)
+        a0 = jnp.zeros((b, n_kv, g, qb, dh), jnp.float32)
+        if span % kb == 0 and span // kb > 1:
+            n_kb = span // kb
+            ks = k_i.reshape(b, n_kb, kb, n_kv, dh).transpose(1, 0, 2, 3, 4)
+            vs = v_i.reshape(b, n_kb, kb, n_kv, dh).transpose(1, 0, 2, 3, 4)
+            jidx = jnp.arange(n_kb)
+
+            def body(carry, xs):
+                k_blk, v_blk, j = xs
+                qpos = q_pos0 + jnp.arange(qb)
+                kpos = lo + j * kb + jnp.arange(kb)
+                mask = None
+                if causal or window:
+                    m = jnp.ones((qb, kb), bool)
+                    if causal:
+                        m &= qpos[:, None] >= kpos[None, :]
+                    if window:
+                        m &= qpos[:, None] - kpos[None, :] < window
+                    mask = m
+                return _online_softmax_block(carry, q_i, k_blk, v_blk, mask,
+                                             softcap), None
+
+            # Flash-attention-style backward: remat the KV-block body so the
+            # (B, K, G, Sq, Skv) probability matrix and mask are NOT saved
+            # as per-iteration scan residuals (25 GiB/layer at 4k train
+            # otherwise) — backward recomputes them from the saved k/v
+            # blocks.
+            body = jax.checkpoint(body)
+            (m, l, acc), _ = lax.scan(body, (m0, l0, a0), (ks, vs, jidx))
+        else:
+            qpos = q_pos0 + jnp.arange(qb)
+            kpos = lo + jnp.arange(span)
+            mask = None
+            if causal or window:
+                mm = jnp.ones((qb, span), bool)
+                if causal:
+                    mm &= qpos[:, None] >= kpos[None, :]
+                if window:
+                    mm &= qpos[:, None] - kpos[None, :] < window
+                mask = mm
+            m, l, acc = _online_softmax_block((m0, l0, a0), q_i, k_i, v_i,
+                                              mask, softcap)
+        out_blocks.append(_finish(m, l, acc, q.dtype))
+    out = jnp.concatenate(out_blocks, axis=3) if n_qb > 1 else out_blocks[0]
+    return out.transpose(0, 3, 1, 2, 4)  # (B, S, K, G, Dh)
+
+
+def decode_attention(q: Array, k_cache: Array, v_cache: Array,
+                     kv_positions: Array, pos: Array, *, window: int = 0,
+                     softcap: float = 0.0,
+                     scale: Optional[float] = None) -> Array:
+    """Single-step attention against a cache.
+
+    q: (B, 1, K, G, Dh); k_cache/v_cache: (B, C, K, Dh);
+    kv_positions: (C,) absolute position held by each cache slot (−1 empty);
+    pos: scalar current position.  Window masking uses absolute positions.
+    """
+    b, _, n_kv, g, dh = q.shape
+    scale = scale if scale is not None else 1.0 / math.sqrt(dh)
+    qs = (q[:, 0] * scale)  # (B, K, G, Dh)
+    s = jnp.einsum("bkgd,bjkd->bkgj", qs, k_cache,
+                   preferred_element_type=jnp.float32)
+    s = _softcap(s, softcap)
+    valid = (kv_positions >= 0) & (kv_positions <= pos)
+    if window:
+        valid &= kv_positions > pos - window
+    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgj,bjkd->bkgd", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out[:, None].astype(q.dtype)  # (B, 1, K, G, Dh)
+
+
+def attn_out(attended: Array, wo: Array) -> Array:
+    """attended: (B, S, K, G, Dh); wo: (H, Dh, d) -> (B, S, d)."""
+    b, s, n_kv, g, dh = attended.shape
+    a = attended.reshape(b, s, n_kv * g, dh)
+    return jnp.einsum("bshe,hed->bsd", a, wo.astype(a.dtype),
+                      preferred_element_type=_row_reduce_dtype(a.dtype)
+                      ).astype(a.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Ring-buffer cache helpers (sliding-window decode)
+# ---------------------------------------------------------------------------
+
+
+def ring_slot_positions(pos: Array, cap: int) -> Array:
+    """Absolute position stored in each ring slot after writing `pos` at
+    slot pos % cap.  Slot w holds the largest p <= pos with p % cap == w
+    (or -1 if none)."""
+    slots = jnp.arange(cap)
+    p = pos - ((pos - slots) % cap)
+    return jnp.where(p >= 0, p, -1)
+
+
+def ring_write(cache: Array, value: Array, pos: Array, cap: int) -> Array:
+    """cache: (B, cap, ...); value: (B, 1, ...) written at slot pos % cap."""
+    slot = (pos % cap).astype(jnp.int32)
+    return lax.dynamic_update_slice_in_dim(cache, value.astype(cache.dtype),
+                                           slot, axis=1)

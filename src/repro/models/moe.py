@@ -1,0 +1,178 @@
+"""Token-choice top-k Mixture of Experts with capacity-bounded dispatch.
+
+Dispatch strategy (TPU / GSPMD adaptation — see DESIGN.md §5):
+
+* Tokens are processed in groups along the *sequence* axis via `lax.scan`
+  (the batch axis stays data-sharded and parallel; the scanned axis is
+  replicated, so no per-iteration collectives are induced by the scan
+  itself).  Group scanning bounds the live dispatched-activation footprint
+  to (B, E, C, d) per step — this is the memory knob that lets dbrx/llama4
+  prefill fit HBM, and on real hardware lets the per-group all-to-alls
+  overlap with expert compute.
+* Within a group, dispatch is *sort-based* (not GShard one-hot einsum):
+  argsort token->expert assignments, compute rank-in-expert by comparing
+  sorted ids, scatter slot indices into an (E, C) table, gather tokens.
+  This avoids materializing (g, E, C) one-hot tensors.
+* Expert weights are sharded over the "model" mesh axis on the expert dim;
+  GSPMD inserts the all-to-alls on the (B, E, C, d) dispatched activations.
+
+Router: softmax over top-k logits (dbrx convention); optional always-on
+shared expert (llama4).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import MoEConfig
+from repro.models.layers import act_fn
+
+Array = jax.Array
+
+
+# Optional sharding constraints for the dispatched activations, set by the
+# launcher (launch/specs.build_cell) before tracing distributed programs.
+# GSPMD cannot infer the expert-parallel layout through the sort/scatter
+# dispatch, so without an explicit constraint the expert FFN einsums get
+# replicated over the model axis (verified: 16x the expected FLOPs in the
+# dbrx dry-run).  Keys: "dispatch" -> sharding for (B, E, C, d) tensors,
+# "out" -> sharding for (B, g, d) combined output.  None = no constraint
+# (single-device smoke tests / examples).
+SHARDING: dict = {"dispatch": None, "out": None}
+
+
+def set_sharding(dispatch=None, out=None) -> None:
+    SHARDING["dispatch"] = dispatch
+    SHARDING["out"] = out
+
+
+def _constrain(x: Array, key: str) -> Array:
+    s = SHARDING.get(key)
+    if s is not None:
+        return jax.lax.with_sharding_constraint(x, s)
+    return x
+
+
+class MoEParams(NamedTuple):
+    router: Array       # (d, E) f32
+    w_gate: Array       # (E, d, f)
+    w_up: Array         # (E, d, f)
+    w_down: Array       # (E, f, d)
+    # Optional shared expert (zeros-shaped-out when unused).
+    s_gate: Array | None = None  # (d, f)
+    s_up: Array | None = None
+    s_down: Array | None = None
+
+
+def capacity(group: int, cfg: MoEConfig) -> int:
+    c = int(group * cfg.top_k * cfg.capacity_factor / cfg.n_experts + 0.999)
+    return max(c, 1)
+
+
+def _dispatch_indices(eids: Array, weights: Array, n_experts: int, cap: int
+                      ) -> Tuple[Array, Array, Array]:
+    """Build the (E*C) slot table for one token group.
+
+    eids: (T, k) expert ids; weights: (T, k) router weights.
+    Returns (slot_token (E*C,) int32 index into T*k flat assignments with
+    T*k = overflow sentinel, slot_weight (E*C,), slot_valid (E*C,) bool).
+    """
+    t, k = eids.shape
+    flat_e = eids.reshape(-1)                      # (T*k,)
+    flat_w = weights.reshape(-1)
+    order = jnp.argsort(flat_e, stable=True)       # group by expert
+    sorted_e = flat_e[order]
+    # rank within expert = position - start offset of that expert
+    counts = jnp.bincount(sorted_e, length=n_experts)
+    starts = jnp.cumsum(counts) - counts           # exclusive prefix
+    rank = jnp.arange(t * k) - starts[sorted_e]
+    ok = rank < cap                                # capacity drop (overflow)
+    slot = sorted_e * cap + rank.astype(jnp.int32)
+    slot = jnp.where(ok, slot, n_experts * cap)    # spill to scratch slot
+    slot_token = jnp.full((n_experts * cap + 1,), t * k, jnp.int32)
+    slot_token = slot_token.at[slot].set(order.astype(jnp.int32),
+                                         mode="drop")
+    slot_token = slot_token[:-1]
+    valid = slot_token < t * k
+    safe = jnp.where(valid, slot_token, 0)
+    slot_weight = jnp.where(valid, flat_w[safe], 0.0)
+    return slot_token, slot_weight, valid
+
+
+def _expert_ffn(xd: Array, p: MoEParams, act: str) -> Array:
+    """xd: (B, E, C, d) -> (B, E, C, d)."""
+    from repro.models.layers import _row_reduce_dtype
+    dt = xd.dtype
+    g = jnp.einsum("becd,edf->becf", xd, p.w_gate.astype(dt),
+                   preferred_element_type=_row_reduce_dtype(dt))
+    u = jnp.einsum("becd,edf->becf", xd, p.w_up.astype(dt),
+                   preferred_element_type=_row_reduce_dtype(dt))
+    h = (act_fn(act)(g) * u).astype(dt)
+    from repro.models.layers import _row_reduce_dtype
+    return jnp.einsum("becf,efd->becd", h, p.w_down.astype(dt),
+                      preferred_element_type=_row_reduce_dtype(dt)
+                      ).astype(dt)
+
+
+def moe_group(x: Array, p: MoEParams, cfg: MoEConfig, act: str) -> Array:
+    """Route one token group.  x: (B, g, d) -> (B, g, d)."""
+    b, g, d = x.shape
+    cap = capacity(g, cfg)
+    logits = jnp.einsum("bgd,de->bge", x.astype(jnp.float32),
+                        p.router.astype(jnp.float32))
+    top_w, top_e = lax.top_k(logits, cfg.top_k)            # (B, g, k)
+    top_w = jax.nn.softmax(top_w, axis=-1)
+
+    def per_row(x_row, e_row, w_row):
+        slot_tok, slot_w, valid = _dispatch_indices(
+            e_row, w_row, cfg.n_experts, cap)
+        tok = jnp.where(valid, slot_tok // cfg.top_k, 0)
+        xd = x_row[tok] * valid[:, None].astype(x_row.dtype)   # (E*C, d)
+        return xd.reshape(cfg.n_experts, cap, d), slot_tok, slot_w, valid
+
+    xd, slot_tok, slot_w, valid = jax.vmap(per_row)(x, top_e, top_w)
+    xd = _constrain(xd, "dispatch")     # all-to-all: tokens -> expert shards
+    yd = _expert_ffn(xd, p, act)                           # (B, E, C, d)
+    yd = _constrain(yd, "dispatch")     # all-to-all back before combine
+
+    def per_row_combine(y_row, slot_tok_row, slot_w_row, valid_row):
+        flat = y_row.reshape(cfg.n_experts * capacity(g, cfg), d)
+        contrib = flat * (slot_w_row * valid_row)[:, None].astype(flat.dtype)
+        tok = jnp.where(valid_row, slot_tok_row // cfg.top_k, g * cfg.top_k)
+        out = jnp.zeros((g + 1, d), flat.dtype)
+        out = out.at[jnp.minimum(tok, g)].add(contrib, mode="drop")
+        return out[:g]
+
+    y = jax.vmap(per_row_combine)(yd, slot_tok, slot_w, valid)
+    y = _constrain(y, "out")
+    if p.s_gate is not None:
+        dt = x.dtype
+        sg = jnp.einsum("bgd,df->bgf", x, p.s_gate.astype(dt),
+                        preferred_element_type=jnp.float32)
+        su = jnp.einsum("bgd,df->bgf", x, p.s_up.astype(dt),
+                        preferred_element_type=jnp.float32)
+        sh = (act_fn(act)(sg) * su).astype(dt)
+        y = y + jnp.einsum("bgf,fd->bgd", sh, p.s_down.astype(dt),
+                           preferred_element_type=jnp.float32).astype(dt)
+    return y.astype(x.dtype)
+
+
+def moe_ffn(x: Array, p: MoEParams, cfg: MoEConfig, act: str) -> Array:
+    """x: (B, S, d).  Scans the sequence axis in groups of cfg.router_group."""
+    b, s, d = x.shape
+    g = min(cfg.router_group, s)
+    if s % g:
+        g = s
+    n_groups = s // g
+    if n_groups == 1:
+        return moe_group(x, p, cfg, act)
+    xs = x.reshape(b, n_groups, g, d).swapaxes(0, 1)       # (G, B, g, d)
+
+    def body(_, xg):
+        return None, moe_group(xg, p, cfg, act)
+
+    _, ys = lax.scan(body, None, xs)
+    return ys.swapaxes(0, 1).reshape(b, s, d)

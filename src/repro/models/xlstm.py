@@ -1,0 +1,256 @@
+"""xLSTM sequence mixers: mLSTM (matrix memory) and sLSTM (scalar memory).
+
+mLSTM prefill/train uses the chunkwise-parallel formulation: intra-chunk
+(triangular) attention in stabilized log-decay space + inter-chunk matrix
+state recurrence, carried by `lax.scan` over chunks.  This is the standard
+linear-time lowering of mLSTM (cf. flash-linear-attention); the exponential
+input/forget gating with running stabilizer `m` follows the xLSTM paper.
+Numerics note (DESIGN.md §2): the denominator uses
+max(|q·n|, 1) after stabilization, matching the paper's normalizer bound.
+
+sLSTM is inherently sequential (recurrent block-diagonal connections); the
+per-step recurrent matvec runs inside `lax.scan` over time, while all input
+projections are hoisted out of the scan.  sLSTM layers are batch-parallel
+only (weights replicated) — see DESIGN.md §5.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+Array = jax.Array
+NEG = -1e30
+
+
+class MLSTMState(NamedTuple):
+    c: Array   # (B, H, Dk, Dv) matrix memory (stabilized)
+    n: Array   # (B, H, Dk) normalizer
+    m: Array   # (B, H) running log stabilizer
+
+
+def mlstm_init_state(b: int, h: int, dk: int, dv: int) -> MLSTMState:
+    return MLSTMState(
+        c=jnp.zeros((b, h, dk, dv), jnp.float32),
+        n=jnp.zeros((b, h, dk), jnp.float32),
+        m=jnp.full((b, h), 0.0, jnp.float32),
+    )
+
+
+def mlstm_chunkwise(q: Array, k: Array, v: Array, i_pre: Array, f_pre: Array,
+                    state: MLSTMState, *, chunk: int = 256
+                    ) -> Tuple[Array, MLSTMState]:
+    """q,k: (B,S,H,Dk); v: (B,S,H,Dv); i_pre,f_pre: (B,S,H) gate
+    pre-activations.  Returns (y (B,S,H,Dv), final state)."""
+    b, s, h, dk = q.shape
+    dv = v.shape[-1]
+    ch = min(chunk, s)
+    if s % ch:
+        ch = s
+    n_chunks = s // ch
+    scale = dk ** -0.5
+
+    def per_chunk(carry: MLSTMState, xs):
+        qc, kc, vc, ic, fc = xs               # (B, ch, H, ...)
+        qc = qc.astype(jnp.float32) * scale
+        kc = kc.astype(jnp.float32)
+        vc32 = vc.astype(jnp.float32)
+        lf = jax.nn.log_sigmoid(fc.astype(jnp.float32))   # (B, ch, H)
+        li = ic.astype(jnp.float32)
+        cum = jnp.cumsum(lf, axis=1)                       # inclusive
+        # D[i, j] = cum_i - cum_j + li_j for j <= i (log decay paths).
+        d = cum[:, :, None] - cum[:, None, :] + li[:, None, :, :]
+        tri = jnp.tril(jnp.ones((ch, ch), bool))
+        d = jnp.where(tri[None, :, :, None], d, NEG)       # (B, ch, ch, H)
+        m_intra = jnp.max(d, axis=2)                       # (B, ch, H)
+        m_inter = carry.m[:, None] + cum                   # (B, ch, H)
+        m_i = jnp.maximum(m_intra, m_inter)
+        # Intra-chunk (triangular) attention in stabilized space.
+        sc = jnp.einsum("bihd,bjhd->bijh", qc, kc)
+        w = sc * jnp.exp(d - m_i[:, :, None])              # (B, ch, ch, H)
+        y_intra = jnp.einsum("bijh,bjhe->bihe", w, vc32)
+        # Inter-chunk contribution from carried state.
+        dec_q = jnp.exp(m_inter - m_i)                     # (B, ch, H)
+        y_inter = jnp.einsum("bihd,bhde->bihe", qc, carry.c) * dec_q[..., None]
+        n_prev_q = jnp.einsum("bihd,bhd->bih", qc, carry.n) * dec_q
+        num = y_intra + y_inter                            # (B, ch, H, Dv)
+        # Normalizer: sum_j w_ij == q_i . (sum_j exp(d_ij - m_i) k_j), i.e.
+        # exactly q . n_intra, so no separate n_intra tensor is needed.
+        den = jnp.sum(w, axis=2) + n_prev_q                # (B, ch, H)
+        y = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_i))[..., None]
+        # State update to end of chunk.
+        m_end = jnp.maximum(carry.m + cum[:, -1], jnp.max(cum[:, -1:, :] - cum + li, axis=1))
+        dec_c = jnp.exp(carry.m + cum[:, -1] - m_end)      # (B, H)
+        dec_k = jnp.exp(cum[:, -1:, :] - cum + li - m_end[:, None])  # (B, ch, H)
+        c_new = carry.c * dec_c[..., None, None] + jnp.einsum(
+            "bjh,bjhd,bjhe->bhde", dec_k, kc, vc32)
+        n_new = carry.n * dec_c[..., None] + jnp.einsum(
+            "bjh,bjhd->bhd", dec_k, kc)
+        return MLSTMState(c_new, n_new, m_end), y.astype(v.dtype)
+
+    if n_chunks > 1:
+        xs = tuple(
+            t.reshape(b, n_chunks, ch, *t.shape[2:]).swapaxes(0, 1)
+            for t in (q, k, v, i_pre, f_pre))
+        # Remat the chunk body: the (B, ch, ch, H) decay/score tensors are
+        # recomputed in the backward instead of being stacked as per-chunk
+        # residuals (same flash-style policy as blockwise_attention).
+        state_f, ys = lax.scan(jax.checkpoint(per_chunk), state, xs)
+        y = ys.swapaxes(0, 1).reshape(b, s, h, dv)
+    else:
+        state_f, y = per_chunk(state, (q, k, v, i_pre, f_pre))
+    return y, state_f
+
+
+def mlstm_step(q: Array, k: Array, v: Array, i_pre: Array, f_pre: Array,
+               state: MLSTMState) -> Tuple[Array, MLSTMState]:
+    """One decode step.  q,k: (B,H,Dk); v: (B,H,Dv); gates (B,H)."""
+    dk = q.shape[-1]
+    qf = q.astype(jnp.float32) * dk ** -0.5
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    lf = jax.nn.log_sigmoid(f_pre.astype(jnp.float32))
+    li = i_pre.astype(jnp.float32)
+    m_new = jnp.maximum(lf + state.m, li)
+    fg = jnp.exp(lf + state.m - m_new)
+    ig = jnp.exp(li - m_new)
+    c_new = state.c * fg[..., None, None] + ig[..., None, None] * (
+        kf[..., :, None] * vf[..., None, :])
+    n_new = state.n * fg[..., None] + ig[..., None] * kf
+    num = jnp.einsum("bhd,bhde->bhe", qf, c_new)
+    den = jnp.einsum("bhd,bhd->bh", qf, n_new)
+    y = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_new))[..., None]
+    return y.astype(v.dtype), MLSTMState(c_new, n_new, m_new)
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+
+class SLSTMState(NamedTuple):
+    c: Array   # (B, H, Dh)
+    n: Array   # (B, H, Dh)
+    h: Array   # (B, H, Dh)
+    m: Array   # (B, H, Dh)
+
+
+def slstm_init_state(b: int, h: int, dh: int) -> SLSTMState:
+    z = jnp.zeros((b, h, dh), jnp.float32)
+    return SLSTMState(z, z, z, z)
+
+
+def _slstm_gates(state: SLSTMState, gates, rec) -> SLSTMState:
+    """Gate math with the recurrent contribution precomputed (pure of r).
+    gates: 4-tuple of (B, H, Dh) f32 pre-activations (z, i, f, o) — passed
+    as SEPARATE leaves so their backward cotangents are direct tensors
+    (slicing a packed (B, 4, H, Dh) here would make autodiff rebuild the
+    packed gradient with pad+add chains whose mixed dtypes force XLA to
+    convert the whole stacked scan buffer every timestep — measured
+    1 GiB/step; §Perf).  rec: (4, B, H, Dh)."""
+    zp = gates[0] + rec[0]
+    ip = gates[1] + rec[1]
+    fp = gates[2] + rec[2]
+    op = gates[3] + rec[3]
+    z = jnp.tanh(zp)
+    m_new = jnp.maximum(fp + state.m, ip)
+    ig = jnp.exp(ip - m_new)
+    fg = jnp.exp(fp + state.m - m_new)
+    c_new = fg * state.c + ig * z
+    n_new = fg * state.n + ig
+    h_new = jax.nn.sigmoid(op) * c_new / jnp.maximum(n_new, 1.0)
+    return SLSTMState(c_new, n_new, h_new, m_new)
+
+
+def _split_gates(pre):
+    """(B, 4, H, Dh) any-dtype -> 4-tuple of (B, H, Dh) f32."""
+    return tuple(pre[:, i].astype(jnp.float32) for i in range(4))
+
+
+def _slstm_cell(state: SLSTMState, pre, r):
+    """pre: (B, 4, H, Dh) gate pre-activations for this step (z, i, f, o);
+    r: (4, H, Dh, Dh) recurrent block-diagonal weights."""
+    rec = jnp.einsum("bhd,ghde->gbhe", state.h, r.astype(jnp.float32))
+    return _slstm_gates(state, _split_gates(pre), rec)
+
+
+@jax.custom_vjp
+def slstm_scan(pre: Array, r: Array, state: SLSTMState
+               ) -> Tuple[Array, SLSTMState]:
+    """pre: (B, S, 4, H, Dh); r: (4, H, Dh, Dh).  Sequential over S.
+
+    Custom VJP (§Perf hillclimb, xlstm train_4k): naive autodiff of the
+    timestep scan accumulates the recurrent-weight gradient in the scan
+    carry, which forces GSPMD to ALL-REDUCE the (4, H, Dh, Dh) gradient —
+    and materialize the (B, 4, H, Dh, Dh) per-step outer products — at
+    EVERY timestep (measured: 1.6e12 collective bytes, 33 s of the
+    baseline's 40 s collective term).  The custom backward instead emits
+    the per-step recurrent cotangents ``drec`` as stacked scan outputs and
+    contracts them against the saved h-sequence in ONE post-scan einsum:
+    one 16 MB all-reduce per layer instead of 49 152."""
+    hs, _, state_f = _slstm_fwd_scan(pre, r, state)
+    return hs, state_f
+
+
+def _slstm_fwd_scan(pre, r, state):
+    def body(st, pre_t):
+        st2 = _slstm_cell(st, pre_t, r)
+        return st2, st2
+    state_f, states = lax.scan(body, state, pre.swapaxes(0, 1))
+    hs = states.h.swapaxes(0, 1)            # (B, S, H, Dh)
+    return hs, states, state_f
+
+
+def _slstm_scan_fwd(pre, r, state):
+    hs, states, state_f = _slstm_fwd_scan(pre, r, state)
+    return (hs, state_f), (pre, r, state, states)
+
+
+def _slstm_scan_bwd(res, cot):
+    pre, r, state0, states = res
+    dhs, dstate_f = cot
+    s = pre.shape[1]
+
+    # state BEFORE step t: shift the stacked states right by one.
+    def shift(seq, init):
+        return jnp.concatenate([init[None].astype(seq.dtype),
+                                seq[:-1]], axis=0)
+    prev = SLSTMState(*(shift(getattr(states, f), getattr(state0, f))
+                        for f in ("c", "n", "h", "m")))
+
+    def body(dstate, xs):
+        pre_t, prev_t, dh_out_t = xs
+        rec_t = jnp.einsum("bhd,ghde->gbhe", prev_t.h,
+                           r.astype(jnp.float32))
+        gates_t = _split_gates(pre_t)
+        _, vjp = jax.vjp(_slstm_gates, prev_t, gates_t, rec_t)
+        dstate = dstate._replace(h=dstate.h + dh_out_t)
+        dprev, dgates_t, drec_t = vjp(dstate)
+        # chain the recurrent matvec back into h_{t-1} (r part deferred)
+        dh_extra = jnp.einsum("gbhe,ghde->bhd", drec_t,
+                              r.astype(jnp.float32))
+        dprev = SLSTMState(dprev.c, dprev.n, dprev.h + dh_extra, dprev.m)
+        # Stack outputs at their final dtype — a mixed-dtype ys stack makes
+        # XLA convert the WHOLE (S, ...) buffer every iteration (§Perf).
+        dpre_t = jnp.stack(dgates_t, axis=1).astype(pre.dtype)
+        return dprev, (dpre_t, drec_t.astype(jnp.bfloat16))
+
+    xs = (pre.swapaxes(0, 1), prev, dhs.swapaxes(0, 1))
+    dstate0, (dpre_s, drec_s) = lax.scan(
+        body, SLSTMState(*dstate_f), xs, reverse=True)
+    # ONE contraction for the recurrent weight gradient (replaces the
+    # per-timestep all-reduce):
+    dr = jnp.einsum("sgbhe,sbhd->ghde", drec_s.astype(jnp.float32),
+                    prev.h)
+    return dpre_s.swapaxes(0, 1), dr.astype(r.dtype), dstate0
+
+
+slstm_scan.defvjp(_slstm_scan_fwd, _slstm_scan_bwd)
+
+
+def slstm_step(pre_t: Array, r: Array, state: SLSTMState
+               ) -> Tuple[Array, SLSTMState]:
+    st2 = _slstm_cell(state, pre_t, r)
+    return st2.h, st2

@@ -1,0 +1,2 @@
+from repro.optim.adamw import AdamWConfig, init_moments, update  # noqa: F401
+from repro.optim.schedule import WarmupCosine  # noqa: F401

@@ -1,0 +1,73 @@
+"""Manual AdamW with controllable moment dtype.
+
+Implemented directly (not optax) so the persistence layer has full control
+over the moment representation: f32 (default), bf16 (halves HBM for the
+400B llama4 budget — DESIGN.md §5), and — on the persist path only —
+the int8 block-quantized form produced by kernels/quant_pack.
+
+Decoupled weight decay, bias-corrected, eps outside sqrt.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    moment_dtype: str = "float32"     # float32 | bfloat16
+    max_grad_norm: float = 1.0
+
+
+def init_moments(params: PyTree, cfg: AdamWConfig) -> Tuple[PyTree, PyTree]:
+    dt = jnp.dtype(cfg.moment_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    return jax.tree.map(zeros, params), jax.tree.map(zeros, params)
+
+
+def global_norm(tree: PyTree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def update(params: PyTree, grads: PyTree, mu: PyTree, nu: PyTree,
+           step: jax.Array, lr: jax.Array, cfg: AdamWConfig
+           ) -> Tuple[PyTree, PyTree, PyTree, jax.Array]:
+    """Returns (new_params, new_mu, new_nu, grad_norm)."""
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.max_grad_norm / (gnorm + 1e-12)) \
+        if cfg.max_grad_norm else 1.0
+    t = (step + 1).astype(jnp.float32)
+    c1 = 1.0 - cfg.b1 ** t
+    c2 = 1.0 - cfg.b2 ** t
+    mdt = jnp.dtype(cfg.moment_dtype)
+
+    def leaf(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m32 = cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * g
+        v32 = cfg.b2 * v.astype(jnp.float32) + (1 - cfg.b2) * g * g
+        mhat = m32 / c1
+        vhat = v32 / c2
+        upd = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        p32 = p.astype(jnp.float32)
+        p_new = p32 - lr * (upd + cfg.weight_decay * p32)
+        return p_new.astype(p.dtype), m32.astype(mdt), v32.astype(mdt)
+
+    out = jax.tree.map(leaf, params, grads, mu, nu)
+    new_p = jax.tree.map(lambda t3: t3[0], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda t3: t3[1], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda t3: t3[2], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    return new_p, new_m, new_v, gnorm

@@ -1,0 +1,23 @@
+"""LR schedules — pure functions of step (DERIVABLE: never checkpointed)."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class WarmupCosine:
+    peak_lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    final_frac: float = 0.1
+
+    def __call__(self, step):
+        s = jnp.asarray(step, jnp.float32)
+        warm = self.peak_lr * s / max(self.warmup_steps, 1)
+        prog = jnp.clip((s - self.warmup_steps)
+                        / max(self.total_steps - self.warmup_steps, 1), 0, 1)
+        cos = self.final_frac + (1 - self.final_frac) * 0.5 * (
+            1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(s < self.warmup_steps, warm, self.peak_lr * cos)

@@ -1,0 +1,3 @@
+from repro.pstruct.dll import DoublyLinkedList  # noqa: F401
+from repro.pstruct.hashmap import Hashmap  # noqa: F401
+from repro.pstruct.bptree import BPTree  # noqa: F401

@@ -1,0 +1,300 @@
+"""Partly-persistent doubly linked list (paper §IV-C).
+
+Array-backed (indices as pointers) so operations vectorize over batches —
+the TPU-framework adaptation of the paper's single-threaded op loop
+(DESIGN.md §2): framework call sites (the paged-KV LRU/free list) naturally
+operate on batches of pages.
+
+Layout mirrors the paper's Listing 1 exactly at the flush-unit level:
+
+* partly persistent: one 64 B row per node = DATA (7 x i64 = 56 B) + NEXT
+  (8 B).  PREV is volatile only.  Appending a node flushes 1 line.
+* fully persistent: one 128 B row per node = DATA + NEXT + PREV + pad
+  (the paper's 64-aligned struct with prev spilling to a second line).
+  Appending flushes 2 lines, plus the successor's prev line on links.
+
+Volatile redundancy (all DERIVABLE): PREV array, TAIL, free-slot list, and
+an order ring (the list order materialized for O(1) batched head pops —
+the LRU eviction path).
+
+Reconstruction (paper §IV-C3, parallelized per §V-F's suggestion): binary
+lifting over NEXT — jump tables next^(2^k); node-at-position for all
+positions computed vectorized in O(N log N); PREV by one scatter; TAIL =
+last; free slots = complement.  This is the TPU/vector-native equivalent of
+the paper's sequential forward walk.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import numpy as np
+
+from repro.core.arena import Arena, FlushStats
+
+NULL = -1
+DATA_WORDS = 7
+
+# header slots
+H_FLAG, H_HEAD, H_COUNT, H_TAIL, H_FREE_HEAD, H_FRESH = range(6)
+
+
+class DoublyLinkedList:
+    """mode: "partly" | "full"."""
+
+    def __init__(self, arena: Arena, capacity: int, mode: str = "partly",
+                 name: str = "dll"):
+        assert mode in ("partly", "full")
+        self.mode = mode
+        self.capacity = capacity
+        self.arena = arena
+        row = 8 if mode == "partly" else 16
+        self._row = row
+        self.nodes = arena.regions.get(f"{name}.nodes") or arena.region(
+            f"{name}.nodes", np.int64, (capacity, row))
+        self.header = arena.regions.get(f"{name}.header") or arena.region(
+            f"{name}.header", np.int64, (1, 8))
+        # volatile redundancy
+        self.prev = np.full(capacity, NULL, np.int64)
+        self._free: list[int] = []
+        self._ring = np.empty(capacity * 2, np.int64)  # order ring
+        self._r0 = 0
+        self._r1 = 0
+
+    @staticmethod
+    def layout(capacity: int, mode: str = "partly", name: str = "dll"):
+        row = 8 if mode == "partly" else 16
+        return {f"{name}.nodes": (np.int64, (capacity, row)),
+                f"{name}.header": (np.int64, (1, 8))}
+
+    # ------------- views over the node rows -------------
+    @property
+    def data(self) -> np.ndarray:
+        return self.nodes.vol[:, :DATA_WORDS]
+
+    @property
+    def next(self) -> np.ndarray:
+        return self.nodes.vol[:, DATA_WORDS]
+
+    @property
+    def head(self) -> int:
+        return int(self.header.vol[0, H_HEAD])
+
+    @property
+    def tail(self) -> int:
+        return int(self.header.vol[0, H_TAIL])
+
+    @property
+    def count(self) -> int:
+        return int(self.header.vol[0, H_COUNT])
+
+    # ------------- allocation -------------
+    def _alloc(self, m: int) -> np.ndarray:
+        ids = []
+        take = min(len(self._free), m)
+        if take:
+            ids.extend(self._free[-take:])
+            del self._free[-take:]
+        fresh_needed = m - take
+        fresh0 = int(self.header.vol[0, H_FRESH])
+        if fresh_needed:
+            if fresh0 + fresh_needed > self.capacity:
+                raise MemoryError("dll arena exhausted")
+            ids.extend(range(fresh0, fresh0 + fresh_needed))
+            self.header.vol[0, H_FRESH] = fresh0 + fresh_needed
+        return np.asarray(ids, np.int64)
+
+    # ------------- operations -------------
+    def append_batch(self, values: np.ndarray) -> np.ndarray:
+        """Append m nodes at the tail.  values: (m, 7) int64.  Returns ids."""
+        m = len(values)
+        ids = self._alloc(m)
+        hv = self.header.vol[0]
+        self.nodes.vol[ids, :DATA_WORDS] = values
+        # chain: old_tail -> ids[0] -> ids[1] ... -> NULL
+        self.nodes.vol[ids[:-1], DATA_WORDS] = ids[1:]
+        self.nodes.vol[ids[-1], DATA_WORDS] = NULL
+        self.prev[ids[1:]] = ids[:-1]
+        old_tail = int(hv[H_TAIL]) if hv[H_COUNT] > 0 else NULL
+        if old_tail != NULL:
+            self.nodes.vol[old_tail, DATA_WORDS] = ids[0]
+            self.prev[ids[0]] = old_tail
+        else:
+            hv[H_HEAD] = ids[0]
+            self.prev[ids[0]] = NULL
+        hv[H_TAIL] = ids[-1]
+        hv[H_COUNT] += m
+        hv[H_FLAG] = 1
+        if self.mode == "full":
+            self.nodes.vol[ids[1:], DATA_WORDS + 1] = ids[:-1]
+            self.nodes.vol[ids[0], DATA_WORDS + 1] = old_tail
+        # ring
+        n = len(ids)
+        if self._r1 + n > self._ring.size:
+            self._compact_ring()
+        self._ring[self._r1:self._r1 + n] = ids
+        self._r1 += n
+        # ---- flush (the persistence cost) ----
+        dirty = ids if old_tail == NULL else np.concatenate([[old_tail], ids])
+        self.nodes.persist_rows(dirty)
+        self.header.persist_rows(np.array([0]))
+        return ids
+
+    def pop_front_batch(self, m: int) -> np.ndarray:
+        """Remove the m oldest nodes (LRU eviction).  Returns their ids."""
+        hv = self.header.vol[0]
+        m = min(m, int(hv[H_COUNT]))
+        if m == 0:
+            return np.empty(0, np.int64)
+        ids = self._ring_pop(m)
+        new_head = int(self.nodes.vol[ids[-1], DATA_WORDS])
+        hv[H_HEAD] = new_head
+        hv[H_COUNT] -= m
+        if new_head == NULL:
+            hv[H_TAIL] = NULL
+        else:
+            self.prev[new_head] = NULL
+        self._free.extend(ids.tolist())
+        # partly: only the header changes persistently (the popped rows are
+        # unreachable from HEAD, so their bytes are dead — zero row flushes).
+        if self.mode == "full":
+            # fully persistent must clear new_head's prev line
+            if new_head != NULL:
+                self.nodes.vol[new_head, DATA_WORDS + 1] = NULL
+                self.nodes.persist_rows(np.array([new_head]))
+        self.header.persist_rows(np.array([0]))
+        return ids
+
+    def delete_batch(self, ids: np.ndarray) -> None:
+        """Unlink an arbitrary batch of node ids (vectorized rounds: each
+        round unlinks ids whose predecessor is not itself being deleted)."""
+        ids = np.asarray(ids, np.int64)
+        pending = set(ids.tolist())
+        hv = self.header.vol[0]
+        while pending:
+            arr = np.fromiter(pending, np.int64)
+            pred = self.prev[arr]
+            ready = np.array([p not in pending for p in pred.tolist()])
+            batch = arr[ready]
+            if batch.size == 0:  # adjacent chain; peel one end
+                batch = arr[:1]
+            nxt = self.nodes.vol[batch, DATA_WORDS]
+            prv = self.prev[batch]
+            dirty = []
+            for b, nx, pv in zip(batch.tolist(), nxt.tolist(), prv.tolist()):
+                if pv != NULL:
+                    self.nodes.vol[pv, DATA_WORDS] = nx
+                    dirty.append(pv)
+                else:
+                    hv[H_HEAD] = nx
+                if nx != NULL:
+                    self.prev[nx] = pv
+                    if self.mode == "full":
+                        self.nodes.vol[nx, DATA_WORDS + 1] = pv
+                        dirty.append(nx)
+                else:
+                    hv[H_TAIL] = pv
+            hv[H_COUNT] -= batch.size
+            self._free.extend(batch.tolist())
+            pending.difference_update(batch.tolist())
+            if dirty:
+                self.nodes.persist_rows(np.asarray(dirty, np.int64))
+            self.header.persist_rows(np.array([0]))
+        self._ring_invalidate(ids)
+
+    # ------------- ring helpers -------------
+    def _compact_ring(self) -> None:
+        live = self._ring[self._r0:self._r1]
+        self._ring[: live.size] = live
+        self._r0, self._r1 = 0, live.size
+
+    def _ring_pop(self, m: int) -> np.ndarray:
+        out = np.empty(m, np.int64)
+        got = 0
+        while got < m:
+            cand = self._ring[self._r0]
+            self._r0 += 1
+            if cand >= 0:
+                out[got] = cand
+                got += 1
+        return out
+
+    def _ring_invalidate(self, ids: np.ndarray) -> None:
+        window = self._ring[self._r0:self._r1]
+        mask = np.isin(window, ids)
+        window[mask] = NULL
+
+    # ------------- traversal / verification -------------
+    def to_list(self) -> np.ndarray:
+        """Materialize list order by walking NEXT (volatile)."""
+        out = np.empty(self.count, np.int64)
+        cur = self.head
+        for i in range(self.count):
+            out[i] = cur
+            cur = int(self.nodes.vol[cur, DATA_WORDS])
+        return out
+
+    # ------------- crash / reconstruction -------------
+    def reconstruct(self) -> None:
+        """Rebuild all volatile redundancy from persistent fields only
+        (paper §IV-C3, vectorized via binary lifting)."""
+        self.header.load()
+        self.nodes.load()
+        hv = self.header.vol[0]
+        if hv[H_FLAG] != 1:
+            # Flag bit unset: nothing was ever flushed — recover as empty
+            # (the paper's "safely initialized" check, §IV-C3).
+            hv[:] = 0
+            hv[H_HEAD] = NULL
+            hv[H_TAIL] = NULL
+        count = int(hv[H_COUNT])
+        head = int(hv[H_HEAD])
+        self.prev = np.full(self.capacity, NULL, np.int64)
+        if count == 0:
+            hv[H_TAIL] = NULL
+            hv[H_FRESH] = 0
+            self._free = []
+            self._r0 = self._r1 = 0
+            return
+        order = order_from_next(self.next, head, count)
+        self.prev[order[1:]] = order[:-1]
+        hv[H_TAIL] = order[-1]
+        live = np.zeros(self.capacity, bool)
+        live[order] = True
+        # Fresh-water mark: everything at/above the max live id is fresh.
+        fresh = int(order.max()) + 1
+        hv[H_FRESH] = fresh
+        free = np.nonzero(~live[:fresh])[0]
+        self._free = free.tolist()
+        self._ring = np.empty(self.capacity * 2, np.int64)
+        self._ring[:count] = order
+        self._r0, self._r1 = 0, count
+        if self.mode == "full":
+            self.nodes.vol[order[1:], DATA_WORDS + 1] = order[:-1]
+            self.nodes.vol[order[0], DATA_WORDS + 1] = NULL
+
+    def flush_stats(self) -> FlushStats:
+        return self.arena.stats
+
+
+def order_from_next(nxt: np.ndarray, head: int, count: int) -> np.ndarray:
+    """node-at-position for positions 0..count-1 via binary lifting.
+
+    O(N log N) work, fully vectorized — the parallel analogue of the
+    paper's sequential NEXT walk."""
+    if count == 0:
+        return np.empty(0, np.int64)
+    n = nxt.shape[0]
+    bits = max(1, int(np.ceil(np.log2(max(count, 2)))))
+    jump = np.empty((bits, n), np.int64)
+    jump[0] = nxt
+    for k in range(1, bits):
+        prev_j = jump[k - 1]
+        safe = np.where(prev_j >= 0, prev_j, 0)
+        jump[k] = np.where(prev_j >= 0, prev_j[safe], NULL)
+    pos = np.arange(count)
+    cur = np.full(count, head, np.int64)
+    for k in range(bits):
+        m = (pos >> k) & 1 == 1
+        if m.any():
+            cur[m] = jump[k][cur[m]]
+    return cur

@@ -1,0 +1,331 @@
+"""Partly-persistent hashmap (paper §IV-E, AOSP-chaining layout).
+
+Layout mirrors the paper's Listing 3 at flush-unit granularity:
+
+* Entries live in a dense append-only slab (the paper's spatially-adjacent
+  struct Entry file).  Partly persistent row = KEY (8 B) + VALUE (7 x 8 B)
+  = 64 B = 1 line.  Fully persistent row additionally persists HASH + NEXT
+  (2nd line; 128 B row).
+* struct Hashmap: only SIZE is essential (one header line).  BUCKETCOUNT,
+  the bucket array, chain links and cached hashes are all volatile
+  redundancy (DERIVABLE).
+
+Deletions in a dense slab: partly-persistent deletion writes a NULL key
+tombstone into the entry row (1 line — the paper's "KEY is not NULL =>
+valid entry" check) — the slab is compacted lazily on rehash.
+
+Batched ops vectorize the chain walks: a probe advances *all* pending
+lookups one link per round (rounds = max chain length, ~O(1/load-factor)).
+
+Reconstruction (paper §IV-E3): scan the slab rows [0, fresh), drop NULL
+keys, recompute hashes, re-derive bucket count from SIZE and the load
+factor, and rebuild chains in slab order (the paper appends at chain tail,
+preserving insertion order — we reproduce that with a grouped argsort).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import numpy as np
+
+from repro.core.arena import Arena, FlushStats
+
+NULL = -1
+KEY_NULL = np.int64(-(2 ** 62))  # tombstone / empty key sentinel
+VALUE_WORDS = 7
+
+H_FLAG, H_SIZE, H_FRESH, H_BUCKETS = range(4)
+
+
+def hash64(keys: np.ndarray) -> np.ndarray:
+    """splitmix64 finalizer — cheap, good avalanche, vectorizable."""
+    x = keys.astype(np.uint64)
+    x = (x ^ (x >> np.uint64(30))) * np.uint64(0xBF58476D1CE4E5B9)
+    x = (x ^ (x >> np.uint64(27))) * np.uint64(0x94D049BB133111EB)
+    x = x ^ (x >> np.uint64(31))
+    return x
+
+
+class Hashmap:
+    def __init__(self, arena: Arena, capacity: int, mode: str = "partly",
+                 load_factor: float = 0.75, name: str = "hm"):
+        assert mode in ("partly", "full")
+        self.mode = mode
+        self.capacity = capacity
+        self.load_factor = load_factor
+        self.arena = arena
+        row = 8 if mode == "partly" else 16
+        self._row = row
+        self.entries = arena.regions.get(f"{name}.entries") or arena.region(
+            f"{name}.entries", np.int64, (capacity, row))
+        self.header = arena.regions.get(f"{name}.header") or arena.region(
+            f"{name}.header", np.int64, (1, 8))
+        n_max = _next_pow2(max(16, int(capacity / load_factor)))
+        self.n_buckets_max = n_max
+        # Fully-persistent mode keeps the bucket array itself in PM (the
+        # paper's struct Hashmap stores BUCKETS persistently); partly mode
+        # keeps it volatile only.
+        self._pbuckets = None
+        if mode == "full":
+            self._pbuckets = arena.regions.get(f"{name}.buckets") or \
+                arena.region(f"{name}.buckets", np.int64, (n_max, 1))
+        self.n_buckets = _next_pow2(max(16, int(capacity / load_factor)))
+        self.buckets = np.full(self.n_buckets, NULL, np.int64)  # volatile
+        self.chain = np.full(capacity, NULL, np.int64)  # volatile next
+        self.hashes = np.zeros(capacity, np.uint64)  # volatile cached hash
+
+    @staticmethod
+    def layout(capacity: int, mode: str = "partly", name: str = "hm",
+               load_factor: float = 0.75):
+        row = 8 if mode == "partly" else 16
+        out = {f"{name}.entries": (np.int64, (capacity, row)),
+               f"{name}.header": (np.int64, (1, 8))}
+        if mode == "full":
+            n_max = _next_pow2(max(16, int(capacity / load_factor)))
+            out[f"{name}.buckets"] = (np.int64, (n_max, 1))
+        return out
+
+    def _persist_buckets(self, bkts: np.ndarray) -> None:
+        if self._pbuckets is not None and bkts.size:
+            self._pbuckets.vol[bkts, 0] = self.buckets[bkts]
+            self._pbuckets.persist_rows(bkts)
+
+    # -------- views --------
+    @property
+    def keys(self) -> np.ndarray:
+        return self.entries.vol[:, 0]
+
+    @property
+    def values(self) -> np.ndarray:
+        return self.entries.vol[:, 1:1 + VALUE_WORDS]
+
+    @property
+    def size(self) -> int:
+        return int(self.header.vol[0, H_SIZE])
+
+    # -------- core probe (vectorized chain walk) --------
+    def _find_slots(self, keys: np.ndarray) -> np.ndarray:
+        """Slab index of each key (NULL if absent)."""
+        h = hash64(keys)
+        b = (h & np.uint64(self.n_buckets - 1)).astype(np.int64)
+        cur = self.buckets[b]
+        found = np.full(len(keys), NULL, np.int64)
+        active = cur != NULL
+        while active.any():
+            idx = cur[active]
+            hit = self.keys[idx] == keys[active]
+            tgt = np.nonzero(active)[0]
+            found[tgt[hit]] = idx[hit]
+            nxt = self.chain[idx]
+            cur[active] = np.where(hit, NULL, nxt)
+            active = cur != NULL
+        return found
+
+    def find_batch(self, keys: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+        """Returns (present mask, values (m, 7))."""
+        slots = self._find_slots(np.asarray(keys, np.int64))
+        ok = slots != NULL
+        vals = np.zeros((len(keys), VALUE_WORDS), np.int64)
+        vals[ok] = self.values[np.where(ok, slots, 0)][ok]
+        return ok, vals
+
+    # -------- mutation --------
+    def insert_batch(self, keys: np.ndarray, values: np.ndarray) -> None:
+        """Insert-or-update.  keys: (m,); values: (m, 7)."""
+        keys = np.asarray(keys, np.int64)
+        values = np.asarray(values, np.int64)
+        # de-dup within batch: keep the last occurrence
+        _, last = np.unique(keys[::-1], return_index=True)
+        keep = np.sort(len(keys) - 1 - last)
+        keys, values = keys[keep], values[keep]
+        slots = self._find_slots(keys)
+        upd = slots != NULL
+        hv = self.header.vol[0]
+        dirty = []
+        if upd.any():
+            s = slots[upd]
+            self.entries.vol[s, 1:1 + VALUE_WORDS] = values[upd]
+            dirty.append(s)
+        new_keys = keys[~upd]
+        if len(new_keys):
+            fresh0 = int(hv[H_FRESH])
+            if fresh0 + len(new_keys) > self.capacity:
+                raise MemoryError("hashmap slab exhausted")
+            ids = np.arange(fresh0, fresh0 + len(new_keys), dtype=np.int64)
+            hv[H_FRESH] = fresh0 + len(new_keys)
+            self.entries.vol[ids, 0] = new_keys
+            self.entries.vol[ids, 1:1 + VALUE_WORDS] = values[~upd]
+            h = hash64(new_keys)
+            self.hashes[ids] = h
+            hv[H_SIZE] += len(new_keys)
+            self._link(ids, h)
+            if self.mode == "full":
+                self.entries.vol[ids, 8] = h.astype(np.int64) >> np.int64(1)
+                # chain pointers persisted too (set in _link)
+            dirty.append(ids)
+            if hv[H_SIZE] > self.load_factor * self.n_buckets:
+                self._grow()
+        hv[H_FLAG] = 1
+        if dirty:
+            self.entries.persist_rows(np.concatenate(dirty))
+        self.header.persist_rows(np.array([0]))
+
+    def _link(self, ids: np.ndarray, h: np.ndarray) -> None:
+        """Append ids to their bucket chains (chain-tail order, as the
+        paper's reconstruction expects).  Vectorized by bucket grouping."""
+        b = (h & np.uint64(self.n_buckets - 1)).astype(np.int64)
+        order = np.argsort(b, kind="stable")
+        bs, ids_s = b[order], ids[order]
+        grp_start = np.concatenate([[True], bs[1:] != bs[:-1]])
+        # head of each new group links after current chain tail
+        tails = self._chain_tails(bs[grp_start])
+        # intra-group chaining
+        self.chain[ids_s[:-1]] = np.where(~grp_start[1:], ids_s[1:], NULL)
+        self.chain[ids_s[-1]] = NULL
+        heads = ids_s[grp_start]
+        new_bucket_heads = []
+        for t, hd, bb in zip(tails.tolist(), heads.tolist(),
+                             bs[grp_start].tolist()):
+            if t == NULL:
+                self.buckets[bb] = hd
+                new_bucket_heads.append(bb)
+            else:
+                self.chain[t] = hd
+        if self.mode == "full":
+            self.entries.vol[ids_s, 9] = self.chain[ids_s]
+            link_dirty = tails[tails != NULL]
+            if link_dirty.size:
+                self.entries.vol[link_dirty, 9] = self.chain[link_dirty]
+                self.entries.persist_rows(link_dirty)
+            self._persist_buckets(np.asarray(new_bucket_heads, np.int64))
+
+    def _chain_tails(self, bkts: np.ndarray) -> np.ndarray:
+        cur = self.buckets[bkts]
+        tails = np.full(len(bkts), NULL, np.int64)
+        active = cur != NULL
+        while active.any():
+            idx = cur[active]
+            tails[np.nonzero(active)[0]] = idx
+            cur[active] = self.chain[idx]
+            active = cur != NULL
+        return tails
+
+    def remove_batch(self, keys: np.ndarray) -> np.ndarray:
+        """Tombstone deletion.  Returns mask of keys that were present."""
+        keys = np.asarray(keys, np.int64)
+        slots = self._find_slots(keys)
+        ok = slots != NULL
+        s = np.unique(slots[ok])
+        if s.size == 0:
+            self.header.persist_rows(np.array([0]))
+            return ok
+        hv = self.header.vol[0]
+        # unlink from volatile chains (vectorized per chain via predecessor
+        # search), write tombstone key persistently.
+        self._unlink(s)
+        self.entries.vol[s, 0] = KEY_NULL
+        hv[H_SIZE] -= s.size
+        dirty = [s]
+        if self.mode == "full":
+            pass  # chain fixes were persisted inside _unlink
+        self.entries.persist_rows(np.concatenate(dirty))
+        self.header.persist_rows(np.array([0]))
+        return ok
+
+    def _unlink(self, slots: np.ndarray) -> None:
+        sset = set(slots.tolist())
+        hs = self.hashes[slots]
+        bkts = np.unique((hs & np.uint64(self.n_buckets - 1)).astype(np.int64))
+        dirty = []
+        head_dirty = []
+        for bb in bkts.tolist():
+            prev = NULL
+            cur = int(self.buckets[bb])
+            while cur != NULL:
+                nxt = int(self.chain[cur])
+                if cur in sset:
+                    if prev == NULL:
+                        self.buckets[bb] = nxt
+                        head_dirty.append(bb)
+                    else:
+                        self.chain[prev] = nxt
+                        if self.mode == "full":
+                            self.entries.vol[prev, 9] = nxt
+                            dirty.append(prev)
+                    self.chain[cur] = NULL
+                else:
+                    prev = cur
+                cur = nxt
+        if self.mode == "full":
+            if dirty:
+                self.entries.persist_rows(np.asarray(dirty, np.int64))
+            self._persist_buckets(np.asarray(head_dirty, np.int64))
+
+    def _grow(self) -> None:
+        if self.n_buckets >= self.n_buckets_max:
+            return
+        self.n_buckets *= 2
+        self._rebuild_chains()
+        if self.mode == "full":
+            # A PM-resident rehash rewrites every chain pointer and the
+            # whole bucket array — the full (expensive) flush, which is
+            # exactly why the paper keeps this structure volatile.
+            fresh = int(self.header.vol[0, H_FRESH])
+            live = np.nonzero(self.keys[:fresh] != KEY_NULL)[0]
+            self.entries.vol[live, 9] = self.chain[live]
+            self.entries.persist_rows(live)
+            self._pbuckets.vol[: self.n_buckets, 0] = \
+                self.buckets[: self.n_buckets]
+            self._pbuckets.persist_range(0, self.n_buckets)
+
+    def _rebuild_chains(self) -> None:
+        fresh = int(self.header.vol[0, H_FRESH])
+        live = np.nonzero(self.keys[:fresh] != KEY_NULL)[0]
+        self.buckets = np.full(self.n_buckets, NULL, np.int64)
+        self.chain = np.full(self.capacity, NULL, np.int64)
+        if live.size == 0:
+            return
+        h = self.hashes[live]
+        b = (h & np.uint64(self.n_buckets - 1)).astype(np.int64)
+        order = np.argsort(b, kind="stable")  # slab order within bucket
+        bs, ls = b[order], live[order]
+        grp_start = np.concatenate([[True], bs[1:] != bs[:-1]])
+        self.buckets[bs[grp_start]] = ls[grp_start]
+        self.chain[ls[:-1]] = np.where(~grp_start[1:], ls[1:], NULL)
+        if ls.size:
+            self.chain[ls[-1]] = NULL
+
+    # -------- crash / reconstruction --------
+    def reconstruct(self) -> None:
+        """Paper §IV-E3: SIZE + dense (KEY, VALUE) rows -> full hashmap."""
+        self.header.load()
+        self.entries.load()
+        hv = self.header.vol[0]
+        if hv[H_FLAG] != 1:
+            # uninitialized image recovers as an empty map (§IV-E3 validity
+            # check on struct Hashmap)
+            hv[:] = 0
+        fresh = int(hv[H_FRESH])
+        live = self.keys[:fresh] != KEY_NULL
+        # SIZE -> derive bucket count (paper derives BUCKETCOUNT from SIZE)
+        size = int(hv[H_SIZE])
+        self.n_buckets = _next_pow2(max(16, int(size / self.load_factor) + 1))
+        self.hashes = np.zeros(self.capacity, np.uint64)
+        idx = np.nonzero(live)[0]
+        self.hashes[idx] = hash64(self.keys[idx])
+        self._rebuild_chains()
+
+    def check_against(self, ref: dict) -> bool:
+        ks = np.fromiter(ref.keys(), np.int64, len(ref))
+        ok, vals = self.find_batch(ks)
+        if not ok.all() or self.size != len(ref):
+            return False
+        want = np.stack([ref[int(k)] for k in ks]) if len(ref) else vals
+        return bool((vals == want).all())
+
+    def flush_stats(self) -> FlushStats:
+        return self.arena.stats
+
+
+def _next_pow2(x: int) -> int:
+    return 1 << (int(x - 1)).bit_length()

@@ -1,0 +1,565 @@
+"""Roofline analysis from compiled (post-SPMD) HLO.
+
+Why a custom analyzer: ``compiled.cost_analysis()`` counts every ``while``
+body ONCE — a 12-superblock layer scan is undercounted 12x (verified
+empirically on this backend; see EXPERIMENTS.md §Method).  Since the whole
+stack is scanned (layers, loss chunks, MoE groups, KV blocks), honest
+roofline terms require multiplying loop-body costs by trip counts.  This
+module parses the optimized HLO text, resolves ``while`` trip counts from
+their condition computations, and walks the call graph with multiplicity.
+
+Reported terms per (arch x shape x mesh), all **seconds per step, per
+device** on the target TPU v5e:
+
+  compute    = dot_flops                / PEAK_FLOPS      (197e12 bf16)
+  memory     = hbm_bytes                / HBM_BW          (819e9 B/s)
+  collective = sum(w_op * tensor_bytes) / ICI_BW          (50e9 B/s/link)
+
+Cost-model conventions (documented for the §Roofline tables):
+
+* dot_flops: 2 * |result| * |contraction| per dot, x loop multiplicity.
+  Elementwise/reduce flops are excluded (<5% for these models and not
+  MXU-bound); ``convolution`` ops are flagged if present.
+* hbm_bytes: per instruction, operand + result bytes (fusion call-site
+  shapes — fusion internals live in registers/VMEM, matching TPU HBM
+  traffic).  dynamic-slice / dynamic-update-slice count only the slice
+  moved (XLA aliases the big buffer in place).  gather/scatter count the
+  gathered/updated rows, not the whole table.  reshape/bitcast/tuple/gte
+  are free; collective operands are counted in the collective term only.
+* collective_bytes: per op, the largest tensor shape on the line (the
+  full rotated payload) with weight 2 for all-reduce (ring reduce +
+  broadcast phases), 1 for all-gather / reduce-scatter / all-to-all /
+  collective-permute.  Ring factor (n-1)/n is approximated as 1.
+* The "pod" axis of the multi-pod mesh maps to the slower inter-pod
+  links; ops whose replica groups span pods are charged at DCN_BW.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+# ----- TPU v5e hardware constants (per chip) -----
+PEAK_FLOPS = 197e12          # bf16 MXU
+HBM_BW = 819e9               # B/s
+ICI_BW = 50e9                # B/s per link (intra-pod ring)
+DCN_BW = 6.25e9              # B/s per chip inter-pod (50 Gb/s NIC share)
+HBM_PER_CHIP = 16 * 2**30    # 16 GiB
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1,
+    "f8e5m2": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([\d,]*)\]")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*"
+    r"(\(.*?\)|[a-z0-9]+\[[\d,]*\](?:\{[^}]*\})?)\s+"
+    r"([\w\-]+)\((.*)$")
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%([\w.\-]+)\s+\(")
+_TRIP_RE = re.compile(r'known_trip_count[^0-9]*?(\d+)')
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_FREE_OPS = {"parameter", "constant", "tuple", "get-tuple-element",
+             "bitcast", "reshape", "after-all", "partition-id",
+             "replica-id", "iota", "rng-bit-generator",
+             # On TPU these fuse into producers/consumers; standalone
+             # appearances in CPU-backend HLO are bf16-emulation artifacts.
+             "convert", "broadcast"}
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Total bytes of all array shapes in an HLO type string (handles
+    tuples)."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _first_shape(type_str: str) -> Tuple[str, Tuple[int, ...]]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return "f32", ()
+    dt, dims = m.groups()
+    shape = tuple(int(d) for d in dims.split(",")) if dims else ()
+    return dt, shape
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    type_str: str
+    opcode: str
+    rest: str          # everything after the opening '('
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instrs: List[Instr]
+
+
+def parse_hlo(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for line in text.splitlines():
+        s = line.rstrip()
+        if not s or s.lstrip().startswith("//"):
+            continue
+        if not s.startswith(" ") and s.endswith("{"):
+            m = _COMP_HDR_RE.match(s.replace("ENTRY ", "", 1).strip()
+                                   if s.startswith("ENTRY")
+                                   else s.strip())
+            if m:
+                cur = Computation(m.group(1), [])
+                comps[cur.name] = cur
+                continue
+        if s.strip() == "}":
+            cur = None
+            continue
+        if cur is None:
+            continue
+        m = _INSTR_RE.match(s)
+        if m:
+            name, type_str, opcode, rest = m.groups()
+            cur.instrs.append(Instr(name, type_str, opcode, rest))
+    return comps
+
+
+def _trip_count(cond: Computation) -> int:
+    """Trip count of a jax-lowered while: condition compares the counter
+    against an s32 constant (possibly inside a wrapped fusion).  Take the
+    largest s32 constant in the condition computation."""
+    best = 0
+    for ins in cond.instrs:
+        if ins.opcode == "constant" and ins.type_str.strip().startswith("s32"):
+            m = re.match(r"([\-\d]+)\)", ins.rest)
+            if m:
+                best = max(best, int(m.group(1)))
+    return best if best > 0 else 1
+
+
+def _attr(rest: str, key: str) -> Optional[str]:
+    m = re.search(key + r"=%?([\w.\-]+)", rest)
+    return m.group(1) if m else None
+
+
+@dataclasses.dataclass
+class HloCosts:
+    dot_flops: float = 0.0
+    hbm_bytes: float = 0.0
+    coll_bytes: float = 0.0          # ICI-charged collective payload
+    coll_bytes_dcn: float = 0.0      # inter-pod-charged payload
+    coll_ops: Dict[str, float] = dataclasses.field(default_factory=dict)
+    has_convolution: bool = False
+
+    def add(self, o: "HloCosts", mult: float) -> None:
+        self.dot_flops += o.dot_flops * mult
+        self.hbm_bytes += o.hbm_bytes * mult
+        self.coll_bytes += o.coll_bytes * mult
+        self.coll_bytes_dcn += o.coll_bytes_dcn * mult
+        for k, v in o.coll_ops.items():
+            self.coll_ops[k] = self.coll_ops.get(k, 0.0) + v * mult
+        self.has_convolution |= o.has_convolution
+
+
+def _spans_pods(rest: str, n_devices: int, pod_size: int) -> bool:
+    """True if the op's replica groups cross a pod boundary.  Devices are
+    laid out pod-major (mesh axis order ("pod","data","model")), so a group
+    crosses pods iff it contains ids from different `id // pod_size`."""
+    if pod_size >= n_devices:
+        return False
+    m = re.search(r"replica_groups=\{([^}]*)\}", rest)
+    if m:
+        for grp in re.findall(r"\{([\d,]+)\}", "{" + m.group(1) + "}"):
+            ids = [int(x) for x in grp.split(",")]
+            if len({i // pod_size for i in ids}) > 1:
+                return True
+        return False
+    # iota form: replica_groups=[G,S]<=[perm or dims]T(...)
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]<=\[([^\]]*)\]"
+                  r"(?:T\(([\d,]+)\))?", rest)
+    if m:
+        g, s = int(m.group(1)), int(m.group(2))
+        dims = [int(x) for x in m.group(3).split(",")]
+        ids = np.arange(int(np.prod(dims))).reshape(dims)
+        if m.group(4):
+            perm = [int(x) for x in m.group(4).split(",")]
+            ids = ids.transpose(perm)
+        ids = ids.reshape(g, s)
+        for row in ids:
+            if len({int(i) // pod_size for i in row}) > 1:
+                return True
+    return False
+
+
+class HloAnalyzer:
+    def __init__(self, text: str, n_devices: int, pod_size: int = 1 << 30):
+        self.comps = parse_hlo(text)
+        self.n_devices = n_devices
+        self.pod_size = pod_size
+        self._shape_of: Dict[str, str] = {}
+        self._instr_of: Dict[str, Instr] = {}
+        for c in self.comps.values():
+            for ins in c.instrs:
+                self._shape_of[ins.name] = ins.type_str
+                self._instr_of[ins.name] = ins
+        self._memo: Dict[str, HloCosts] = {}
+
+    # -- per-instruction costs -------------------------------------------
+    def _operands(self, ins: Instr) -> List[str]:
+        # operand list = %names before the first "), " attr break
+        head = ins.rest.split("),")[0]
+        return re.findall(r"%([\w.\-]+)", head)
+
+    def _operand_bytes(self, ins: Instr) -> int:
+        return sum(_shape_bytes(self._shape_of.get(o, ""))
+                   for o in self._operands(ins))
+
+    def _fusion_bytes(self, ins: Instr) -> int:
+        """HBM traffic of a fusion: bytes actually read from each external
+        operand + result written.  A fused-computation parameter consumed
+        ONLY through dynamic-slice/gather is read at slice granularity
+        (this is how scan xs are consumed — charging the full stacked
+        tensor per iteration would overcount by the trip count)."""
+        tgt = _attr(ins.rest, "calls")
+        comp = self.comps.get(tgt) if tgt else None
+        result = _shape_bytes(ins.type_str)
+        if comp is None:
+            return result + self._operand_bytes(ins)
+        params: Dict[str, str] = {}
+        uses: Dict[str, List[Instr]] = {}
+        # bitcast/reshape/copy chains are aliases of their source; whole-
+        # buffer `convert` is treated as transparent too — the CPU fusion
+        # emitter wraps in-place stack updates as convert(buf) -> DUS ->
+        # convert(buf) per loop iteration, a backend artifact the TPU
+        # emitter does not produce (normalized out of the traffic model).
+        alias: Dict[str, str] = {}
+        for i2 in comp.instrs:
+            if i2.opcode == "parameter":
+                params[i2.name] = i2.type_str
+                uses[i2.name] = []
+        for i2 in comp.instrs:
+            if i2.opcode == "parameter":
+                continue
+            ops_ = self._operands(i2)
+            if i2.opcode in ("bitcast", "reshape", "copy", "convert") \
+                    and ops_:
+                src = alias.get(ops_[0], ops_[0])
+                if src in params:
+                    alias[i2.name] = src
+                    continue
+            for o in ops_:
+                root = alias.get(o, o)
+                if root in uses:
+                    uses[root].append(i2)
+        def _op0_is(u: Instr, pname: str) -> bool:
+            ops_ = self._operands(u)
+            return bool(ops_) and alias.get(ops_[0], ops_[0]) == pname
+
+        read = 0
+        in_place = 0   # bytes written in place through a DUS root
+        for pname, ptype in params.items():
+            us = uses[pname]
+            if not us:
+                continue
+            if all(u.opcode in ("dynamic-slice", "gather")
+                   and _op0_is(u, pname) for u in us):
+                read += sum(_shape_bytes(u.type_str) for u in us)
+            elif all(u.opcode == "dynamic-update-slice"
+                     and _op0_is(u, pname) for u in us):
+                # scan-residual stacking: the big buffer is aliased in
+                # place; traffic = the update slices only (read-modify
+                # -write of the touched region).
+                for u in us:
+                    ops_ = self._operands(u)
+                    upd = _shape_bytes(self._shape_of.get(ops_[1], "")) \
+                        if len(ops_) > 1 else 0
+                    in_place += 2 * upd
+                if _shape_bytes(ptype) == result:
+                    result = 0     # root writes in place, not a full copy
+            else:
+                read += _shape_bytes(ptype)
+        return read + in_place + result
+
+    def _is_bf16_upcast(self, ins: Instr) -> bool:
+        """True when every operand of a collective is an f32 tensor
+        produced by converting bf16 (directly or via a convert-only
+        fusion)."""
+        ops_ = self._operands(ins)
+        if not ops_:
+            return False
+        found = False
+        for o in ops_:
+            src_ins = self._instr_of.get(o)
+            if src_ins is None or not src_ins.type_str.startswith("f32"):
+                return False
+            if src_ins.opcode == "convert":
+                in0 = self._instr_of.get(
+                    (self._operands(src_ins) or [""])[0])
+                if in0 is None or not in0.type_str.startswith("bf16"):
+                    return False
+                found = True
+            elif src_ins.opcode == "fusion":
+                # artifact signature: the fused computation's root is a
+                # convert-to-f32 whose input is bf16 (the true payload)
+                tgt = _attr(src_ins.rest, "calls")
+                comp = self.comps.get(tgt)
+                if comp is None or not comp.instrs:
+                    return False
+                root = comp.instrs[-1]
+                if root.opcode != "convert" \
+                        or not root.type_str.startswith("f32"):
+                    return False
+                rops = self._operands(root)
+                shapes = {i2.name: i2.type_str for i2 in comp.instrs}
+                if not rops or not shapes.get(rops[0], "").startswith(
+                        "bf16"):
+                    return False
+                found = True
+            else:
+                return False
+        return found
+
+    def _consumers_are_bf16_converts(self, comp: Computation,
+                                     ins: Instr) -> bool:
+        """True when every consumer of a collective's f32 result (through
+        one level of get-tuple-element) immediately converts it to bf16 —
+        i.e. nothing uses the f32 value, so on the TPU target the
+        collective itself runs at bf16 width (the f32 stop-over is the
+        CPU DotThunk upcast around bf16 dots)."""
+        if not ins.type_str.lstrip("(").startswith("f32"):
+            return False
+        names = {ins.name}
+        consumers: List[Instr] = []
+        for i2 in comp.instrs:
+            if i2 is ins:
+                continue
+            ops_ = self._operands(i2)
+            if any(o in names for o in ops_):
+                if i2.opcode == "get-tuple-element":
+                    names.add(i2.name)
+                else:
+                    consumers.append(i2)
+        if not consumers:
+            return False
+        for c in consumers:
+            if c.opcode == "convert" and c.type_str.startswith("bf16"):
+                continue
+            if c.opcode == "fusion":
+                tgt = _attr(c.rest, "calls")
+                fc = self.comps.get(tgt)
+                if fc and fc.instrs and fc.instrs[-1].opcode == "convert" \
+                        and fc.instrs[-1].type_str.startswith("bf16"):
+                    continue
+            return False
+        return True
+
+    def _dot_flops(self, ins: Instr) -> float:
+        out_elems = 1
+        _, oshape = _first_shape(ins.type_str)
+        for d in oshape:
+            out_elems *= d
+        m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.rest)
+        ops = self._operands(ins)
+        contraction = 1
+        if m and ops:
+            lhs_t = self._shape_of.get(ops[0], "")
+            _, lshape = _first_shape(lhs_t)
+            dims = [int(x) for x in m.group(1).split(",") if x]
+            for d in dims:
+                if d < len(lshape):
+                    contraction *= lshape[d]
+        return 2.0 * out_elems * contraction
+
+    # -- computation walk --------------------------------------------------
+    def costs(self, comp_name: str) -> HloCosts:
+        if comp_name in self._memo:
+            return self._memo[comp_name]
+        total = HloCosts()
+        comp = self.comps.get(comp_name)
+        if comp is None:
+            self._memo[comp_name] = total
+            return total
+        self._memo[comp_name] = total  # break cycles defensively
+        for ins in comp.instrs:
+            op = ins.opcode
+            if op in _FREE_OPS:
+                continue
+            if op == "while":
+                body = _attr(ins.rest, "body")
+                cond = _attr(ins.rest, "condition")
+                m = _TRIP_RE.search(ins.rest)
+                if m:
+                    trips = int(m.group(1))
+                elif cond in self.comps:
+                    trips = _trip_count(self.comps[cond])
+                else:
+                    trips = 1
+                if body:
+                    total.add(self.costs(body), trips)
+                continue
+            if op in ("call", "conditional"):
+                tgt = _attr(ins.rest, "to_apply") or _attr(ins.rest,
+                                                           "true_computation")
+                if tgt:
+                    total.add(self.costs(tgt), 1.0)
+                continue
+            base = op[:-6] if op.endswith("-start") else op
+            if base in COLLECTIVES:
+                payload = max(_shape_bytes(ins.type_str),
+                              self._operand_bytes(ins))
+                if self._is_bf16_upcast(ins) or \
+                        self._consumers_are_bf16_converts(comp, ins):
+                    # CPU-backend artifact: DotThunk cannot execute bf16
+                    # dots, so XLA upcasts bf16 values to f32 around the
+                    # collective (producer- or consumer-side).  On the
+                    # TPU target the dot is native bf16 and the
+                    # collective moves bf16 — charge the true width.
+                    payload //= 2
+                w = 2.0 if base == "all-reduce" else 1.0
+                if _spans_pods(ins.rest, self.n_devices, self.pod_size):
+                    total.coll_bytes_dcn += w * payload
+                else:
+                    total.coll_bytes += w * payload
+                total.coll_ops[base] = total.coll_ops.get(base, 0) + 1
+                continue
+            if op.endswith("-done"):
+                continue
+            if op == "dot":
+                total.dot_flops += self._dot_flops(ins)
+                total.hbm_bytes += (_shape_bytes(ins.type_str)
+                                    + self._operand_bytes(ins))
+                continue
+            if op == "convolution":
+                total.has_convolution = True
+            if op in ("dynamic-slice", "dynamic-update-slice"):
+                # in-place: only the moved slice counts
+                ops_ = self._operands(ins)
+                if op == "dynamic-update-slice" and len(ops_) >= 2:
+                    upd = _shape_bytes(self._shape_of.get(ops_[1], ""))
+                    total.hbm_bytes += 2 * upd
+                else:
+                    total.hbm_bytes += 2 * _shape_bytes(ins.type_str)
+                continue
+            if op == "gather":
+                total.hbm_bytes += 2 * _shape_bytes(ins.type_str)
+                continue
+            if op == "scatter":
+                ops_ = self._operands(ins)
+                upd = _shape_bytes(self._shape_of.get(ops_[-1], "")) \
+                    if ops_ else 0
+                total.hbm_bytes += 2 * upd + _shape_bytes(ins.type_str) // 8
+                continue
+            if op == "fusion":
+                total.hbm_bytes += self._fusion_bytes(ins)
+                continue
+            # generic op: operands + result
+            total.hbm_bytes += (_shape_bytes(ins.type_str)
+                                + self._operand_bytes(ins))
+        return total
+
+    def entry(self) -> HloCosts:
+        for name, comp in self.comps.items():
+            if "main" in name:
+                return self.costs(name)
+        # fallback: the largest computation
+        name = max(self.comps, key=lambda n: len(self.comps[n].instrs))
+        return self.costs(name)
+
+
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class Roofline:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dot_flops: float             # per device, per step
+    hbm_bytes: float
+    coll_bytes: float
+    coll_bytes_dcn: float
+    coll_ops: Dict[str, float]
+    raw_cost_flops: float        # cost_analysis() (loop-undercounted)
+    raw_cost_bytes: float
+    model_flops: float           # 6*N*D (train) / 2*N*D (inference), global
+    n_devices: int
+    per_device_hbm: Optional[int] = None
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_seconds(self) -> float:
+        """No-overlap upper bound: max term (perfect overlap) is the
+        roofline; we report max() as the achievable step time."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        hlo_global = self.dot_flops * self.n_devices
+        return self.model_flops / hlo_global if hlo_global else 0.0
+
+    @property
+    def mfu(self) -> float:
+        """Model FLOPs utilization at the roofline step time."""
+        denom = self.step_seconds * self.n_devices * PEAK_FLOPS
+        return self.model_flops / denom if denom else 0.0
+
+
+def analyze(compiled, *, n_devices: int, pod_size: int = 1 << 30,
+            model_flops: float = 0.0) -> Roofline:
+    text = compiled.as_text()
+    an = HloAnalyzer(text, n_devices, pod_size)
+    c = an.entry()
+    ca = {}
+    try:
+        ca = compiled.cost_analysis() or {}
+    except Exception:
+        pass
+    return Roofline(
+        compute_s=c.dot_flops / PEAK_FLOPS,
+        memory_s=c.hbm_bytes / HBM_BW,
+        collective_s=c.coll_bytes / ICI_BW + c.coll_bytes_dcn / DCN_BW,
+        dot_flops=c.dot_flops,
+        hbm_bytes=c.hbm_bytes,
+        coll_bytes=c.coll_bytes,
+        coll_bytes_dcn=c.coll_bytes_dcn,
+        coll_ops=c.coll_ops,
+        raw_cost_flops=float(ca.get("flops", 0.0)),
+        raw_cost_bytes=float(ca.get("bytes accessed", 0.0)),
+        model_flops=model_flops,
+        n_devices=n_devices,
+    )
+
+
+def memory_stats(compiled) -> Dict[str, int]:
+    ma = compiled.memory_analysis()
+    out = {}
+    for k in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "alias_size_in_bytes",
+              "generated_code_size_in_bytes"):
+        out[k] = int(getattr(ma, k, 0))
+    out["total_hbm_bytes"] = (out["argument_size_in_bytes"]
+                              + out["output_size_in_bytes"]
+                              + out["temp_size_in_bytes"]
+                              - out["alias_size_in_bytes"])
+    out["fits_v5e_16g"] = out["total_hbm_bytes"] <= HBM_PER_CHIP
+    return out

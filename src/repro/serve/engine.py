@@ -1,0 +1,206 @@
+"""Serving engine: batched decode with partly-persistent session state.
+
+State classification (the paper's contract, applied to serving):
+* ESSENTIAL  — request table (Hashmap: rid -> slot/lengths) and the token
+  log (prompt + generated tokens per slot), both arena-backed;
+* DERIVABLE  — everything on device: KV caches / recurrent states are
+  rebuilt by re-prefilling the persisted token log after a crash; the
+  paged-LRU metadata reconstructs from its persistent NEXT chain
+  (kvcache.PagedAllocator).
+
+The decode path runs a jit'd `decode_step` over fixed batch slots
+(slot-contiguous caches; the paged allocator manages page *metadata* —
+documented simplification, DESIGN.md §3).  Greedy sampling keeps recovery
+bit-checkable: tokens generated after recovery must equal an uninterrupted
+run, which tests/test_serving.py asserts.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.arena import open_arena
+from repro.models.model import Model
+from repro.pstruct.hashmap import Hashmap
+from repro.serve.kvcache import PagedAllocator, PagedConfig
+
+# request-table value row: (slot, prompt_len, total_len, active, 0, 0, 0)
+V_SLOT, V_PLEN, V_TLEN, V_ACTIVE = range(4)
+
+
+@dataclasses.dataclass
+class EngineConfig:
+    max_batch: int = 4
+    s_max: int = 128
+    max_requests: int = 64
+    mode: str = "partly"          # persistence mode for host structures
+    page_tokens: int = 16
+
+
+class ServingEngine:
+    def __init__(self, model: Model, params, cfg: EngineConfig,
+                 arena_path: Optional[str] = None):
+        self.model = model
+        self.params = params
+        self.cfg = cfg
+        layout = dict(Hashmap.layout(cfg.max_requests, cfg.mode, name="req"))
+        layout["tokens"] = (np.int32, (cfg.max_batch, cfg.s_max))
+        self.arena = open_arena(arena_path, layout)
+        self.table = Hashmap(self.arena, cfg.max_requests, cfg.mode,
+                             name="req")
+        self.tok_region = self.arena.regions["tokens"]
+        self.paging = PagedAllocator(PagedConfig(
+            n_pages=cfg.max_batch * (cfg.s_max // cfg.page_tokens),
+            page_tokens=cfg.page_tokens, mode=cfg.mode))
+        # device state (DERIVABLE)
+        self.cache = model.init_cache(cfg.max_batch, cfg.s_max)
+        self.pos = np.zeros(cfg.max_batch, np.int64)       # per-slot length
+        self.slot_rid = np.full(cfg.max_batch, -1, np.int64)
+        self._decode = jax.jit(model.decode_step)
+        self._prefill = jax.jit(lambda p, b: model.prefill(
+            p, b, s_max=cfg.s_max))
+
+    # ------------------------------------------------------------------
+    def _free_slot(self) -> int:
+        for i in range(self.cfg.max_batch):
+            if self.slot_rid[i] < 0:
+                return i
+        raise RuntimeError("no free slots")
+
+    def add_request(self, rid: int, prompt: np.ndarray) -> int:
+        slot = self._free_slot()
+        plen = len(prompt)
+        # ESSENTIAL: token log row + request-table entry
+        self.tok_region.vol[slot, :plen] = prompt
+        self.tok_region.persist_range(slot, slot + 1)
+        val = np.zeros((1, 7), np.int64)
+        val[0, :4] = [slot, plen, plen, 1]
+        self.table.insert_batch(np.array([rid], np.int64), val)
+        self.paging.alloc(rid, -(-plen // self.cfg.page_tokens))
+        self.arena.commit()
+        # DERIVABLE: device prefill into the slot
+        self._prefill_slot(slot, prompt)
+        self.slot_rid[slot] = rid
+        self.pos[slot] = plen
+        return slot
+
+    def _prefill_slot(self, slot: int, tokens: np.ndarray) -> None:
+        batch = {"tokens": jnp.asarray(tokens, jnp.int32)[None]}
+        if self.model.cfg.family == "audio":
+            batch["frames"] = jnp.zeros(
+                (1, self.model.cfg.encoder_seq, self.model.cfg.d_model),
+                self.model.compute_dtype)
+        if self.model.cfg.family == "vlm":
+            batch["context"] = jnp.zeros(
+                (1, self.model.cfg.context_seq, self.model.cfg.d_model),
+                self.model.compute_dtype)
+        _, kv = self._prefill(self.params, batch)
+        # write the (B=1) cache into this slot of the batched cache
+        self.cache = _map_slot(
+            self.cache, kv,
+            lambda full, one, ax: jax.lax.dynamic_update_slice_in_dim(
+                full, one.astype(full.dtype), slot, axis=ax))
+
+    def step(self) -> Dict[int, int]:
+        """One greedy decode step for every active slot.  Returns
+        {rid: token}.  Per-slot positions differ, so slots run their own
+        decode_step (jit'd once; static shapes)."""
+        out: Dict[int, int] = {}
+        for slot in range(self.cfg.max_batch):
+            rid = int(self.slot_rid[slot])
+            if rid < 0:
+                continue
+            p = int(self.pos[slot])
+            if p >= self.cfg.s_max:
+                continue
+            last_tok = int(self.tok_region.vol[slot, p - 1])
+            logits, self.cache = self._decode_slot(slot, last_tok, p)
+            tok = int(np.asarray(jnp.argmax(logits)))
+            # ESSENTIAL: append the generated token + bump lengths
+            self.tok_region.vol[slot, p] = tok
+            self.tok_region.persist_range(slot, slot + 1)
+            val = np.zeros((1, 7), np.int64)
+            val[0, :4] = [slot, 0, 0, 1]
+            ok, cur = self.table.find_batch(np.array([rid], np.int64))
+            cur[0, V_TLEN] += 1
+            self.table.insert_batch(np.array([rid], np.int64), cur)
+            self.pos[slot] = p + 1
+            out[rid] = tok
+        self.arena.commit()
+        return out
+
+    def _decode_slot(self, slot: int, token: int, p: int):
+        # extract the slot's cache, run decode at B=1, re-seat it
+        one = _map_slot(
+            self.cache, self.cache,
+            lambda full, _, ax: jax.lax.dynamic_slice_in_dim(
+                full, slot, 1, axis=ax))
+        logits, one2 = self._decode(self.params, one,
+                                    jnp.asarray([token], jnp.int32),
+                                    jnp.asarray(p, jnp.int32))
+        cache = _map_slot(
+            self.cache, one2,
+            lambda full, o, ax: jax.lax.dynamic_update_slice_in_dim(
+                full, o.astype(full.dtype), slot, axis=ax))
+        self.cache = cache
+        return logits[0], cache
+
+    # ------------------------------------------------------------------
+    def crash(self) -> None:
+        """Drop ALL device + volatile host state."""
+        self.cache = None
+        self.pos = None
+        self.slot_rid = None
+        self.arena.crash()
+
+    def recover(self) -> float:
+        """Paper-style recovery: reload essential regions, reconstruct the
+        hashmap + LRU, re-prefill every active request's token log."""
+        import time
+        t0 = time.perf_counter()
+        self.arena.reopen()
+        self.table.reconstruct()
+        self.paging.recover()
+        self.cache = self.model.init_cache(self.cfg.max_batch,
+                                           self.cfg.s_max)
+        self.pos = np.zeros(self.cfg.max_batch, np.int64)
+        self.slot_rid = np.full(self.cfg.max_batch, -1, np.int64)
+        # enumerate live requests from the dense entry slab
+        fresh = int(self.table.header.vol[0, 2])
+        for e in range(fresh):
+            rid = int(self.table.keys[e])
+            if rid == np.iinfo(np.int64).min or rid < 0:
+                continue
+            from repro.pstruct.hashmap import KEY_NULL
+            if self.table.keys[e] == KEY_NULL:
+                continue
+            val = self.table.values[e]
+            if val[V_ACTIVE] != 1:
+                continue
+            slot = int(val[V_SLOT])
+            tlen = int(val[V_TLEN])
+            toks = np.array(self.tok_region.vol[slot, :tlen], np.int32)
+            self._prefill_slot(slot, toks)
+            self.slot_rid[slot] = rid
+            self.pos[slot] = tlen
+        return time.perf_counter() - t0
+
+
+def _map_slot(full_tree, other_tree, fn):
+    """Apply fn(full_leaf, other_leaf, batch_axis) over a cache pytree.
+    The batch axis is structural, not shape-inferred: leaves under the
+    stacked "blocks" subtree carry a leading superblock dim (batch at axis
+    1); leaves under "rem" have batch at axis 0."""
+    out = dict(full_tree)
+    if "blocks" in full_tree:
+        out["blocks"] = jax.tree.map(lambda f, o: fn(f, o, 1),
+                                     full_tree["blocks"],
+                                     other_tree["blocks"])
+    if "rem" in full_tree:
+        out["rem"] = jax.tree.map(lambda f, o: fn(f, o, 0),
+                                  full_tree["rem"], other_tree["rem"])
+    return out

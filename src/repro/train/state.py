@@ -1,0 +1,33 @@
+"""TrainState pytree — the unit of persistence policy classification."""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class TrainState(NamedTuple):
+    """Field names align with repro.core.policy.DEFAULT_RULES:
+    params/step/data_seed are ESSENTIAL, mu/nu APPROXIMABLE, rng DERIVABLE.
+    """
+    params: PyTree
+    mu: PyTree
+    nu: PyTree
+    step: jax.Array          # scalar int32
+    data_seed: jax.Array     # scalar int32 (with step => pipeline cursor)
+    rng: jax.Array           # DERIVABLE: PRNGKey(data_seed) fold_in step
+
+    def as_dict(self) -> Dict[str, Any]:
+        return self._asdict()
+
+
+def new_state(params: PyTree, mu: PyTree, nu: PyTree, seed: int) -> TrainState:
+    return TrainState(
+        params=params, mu=mu, nu=nu,
+        step=jnp.zeros((), jnp.int32),
+        data_seed=jnp.asarray(seed, jnp.int32),
+        rng=jax.random.PRNGKey(seed),
+    )

@@ -1,0 +1,104 @@
+"""train_step builder: loss -> grads -> AdamW, with optional microbatch
+gradient accumulation (scan) — the single jit'd program the dry-run lowers.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.model import Model
+from repro.optim.adamw import AdamWConfig, update
+from repro.train.state import TrainState
+
+PyTree = Any
+
+
+def build_train_step(model: Model, opt: AdamWConfig,
+                     schedule: Callable[[jax.Array], jax.Array],
+                     microbatches: int = 1,
+                     grad_sync_dtype: Optional[str] = None,
+                     param_shardings: Optional[PyTree] = None):
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    grad_sync_dtype: dtype the per-microbatch gradients are cast to BEFORE
+    the cross-replica reduction GSPMD inserts — bf16 halves the gradient
+    all-reduce bytes (the dominant collective for the MoE archs, §Perf);
+    accumulation stays f32.  None keeps f32 sync (bitwise baseline).
+
+    param_shardings: when given (distributed runs), the f32 master params
+    are cast to the compute dtype and RE-CONSTRAINED to their sharding
+    before the loss — forcing the FSDP all-gathers to move bf16 instead of
+    f32 (2x fewer param-AG bytes, §Perf).
+    """
+    sync_dt = jnp.dtype(grad_sync_dtype) if grad_sync_dtype else None
+
+    def prep_params(params):
+        if param_shardings is None:
+            return params
+        def cast(p, s):
+            if p.dtype == jnp.float32:
+                return jax.lax.with_sharding_constraint(
+                    p.astype(model.compute_dtype), s)
+            return p
+        return jax.tree.map(cast, params, param_shardings)
+
+    def loss_fn(params, batch):
+        return model.loss(prep_params(params), batch)
+
+    def train_step(state: TrainState, batch: Dict[str, jax.Array]
+                   ) -> Tuple[TrainState, Dict[str, jax.Array]]:
+        if microbatches > 1:
+            def split(x):
+                b = x.shape[0]
+                return x.reshape(microbatches, b // microbatches,
+                                 *x.shape[1:])
+            mb = jax.tree.map(split, batch)
+
+            def acc_body(acc, mbatch):
+                l, g = jax.value_and_grad(loss_fn)(state.params, mbatch)
+                if sync_dt is not None:
+                    g = jax.tree.map(lambda x: x.astype(sync_dt), g)
+                if param_shardings is not None:
+                    # Constrain per-microbatch grads to the (FSDP-sharded)
+                    # param layout: GSPMD then REDUCE-SCATTERS each
+                    # microbatch's partial grads (half the bytes of the
+                    # all-reduce it inserts for a replicated accumulator),
+                    # and the sharded sum feeds AdamW directly (§Perf).
+                    g = jax.tree.map(jax.lax.with_sharding_constraint, g,
+                                     param_shardings)
+                acc_l, acc_g = acc
+                return (acc_l + l,
+                        jax.tree.map(lambda a, b_: a + b_.astype(a.dtype),
+                                     acc_g, g)), None
+
+            zero_g = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state.params)
+            (loss, grads), _ = lax.scan(acc_body, (jnp.zeros(()), zero_g), mb)
+            loss = loss / microbatches
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+        else:
+            loss, grads = jax.value_and_grad(loss_fn)(state.params, batch)
+            if sync_dt is not None:
+                grads = jax.tree.map(
+                    lambda x: x.astype(sync_dt).astype(jnp.float32), grads)
+
+        lr = schedule(state.step)
+        new_p, new_m, new_v, gnorm = update(
+            state.params, grads, state.mu, state.nu, state.step, lr, opt)
+        new_state = TrainState(
+            params=new_p, mu=new_m, nu=new_v,
+            step=state.step + 1,
+            data_seed=state.data_seed,
+            # DERIVABLE by construction: PRNGKey(data_seed) folded with step
+            # (matches core.reconstruct.rebuild_rng exactly).
+            rng=jax.random.fold_in(jax.random.PRNGKey(state.data_seed),
+                                   state.step + 1),
+        )
+        metrics = {"loss": loss, "lr": lr, "grad_norm": gnorm}
+        return new_state, metrics
+
+    return train_step

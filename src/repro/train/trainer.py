@@ -1,0 +1,127 @@
+"""Trainer: the host loop tying pipeline, train_step, and checkpoints.
+
+Fault-tolerance contract (tested in tests/test_crash_restart.py):
+* checkpoint every `ckpt_every` steps through the configured policy
+  (fully / partly / partly+q8 / partly+drop), async by default;
+* `crash()` drops ALL volatile state (python refs + device buffers);
+* `resume()` restores from the latest valid checkpoint, reconstructs
+  DERIVABLE state (pipeline cursor from (seed, step), rng), and continues —
+  with the partly policy + persisted moments the continued loss trajectory
+  is bit-identical to an uninterrupted run (asserted in tests).
+Straggler/elastic posture (single-controller runtime): per-step deadline
+watchdog — a step exceeding `deadline_s` marks the incarnation failed so
+the launcher respawns from the last checkpoint (see launch/train.py);
+restore accepts any target mesh (ckpt.manager restore-time re-shard).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import numpy as np
+
+from repro.ckpt.manager import CheckpointManager
+from repro.core import policy as pol
+from repro.data.pipeline import Pipeline
+from repro.models.model import Model
+from repro.optim.adamw import AdamWConfig, init_moments
+from repro.optim.schedule import WarmupCosine
+from repro.train.state import TrainState, new_state
+from repro.train.step import build_train_step
+
+PyTree = Any
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    steps: int = 100
+    ckpt_every: int = 20
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    policy: pol.PersistPolicy = pol.PARTLY_PERSISTENT
+    seed: int = 0
+    global_batch: int = 8
+    seq_len: int = 64
+    microbatches: int = 1
+    async_ckpt: bool = True
+    deadline_s: float = 0.0      # 0 = watchdog off
+
+
+class Trainer:
+    def __init__(self, model: Model, opt: AdamWConfig, cfg: TrainerConfig,
+                 shardings: Optional[PyTree] = None):
+        self.model = model
+        self.opt = opt
+        self.cfg = cfg
+        self.schedule = WarmupCosine(total_steps=max(cfg.steps, 10))
+        self.pipeline = Pipeline(model.cfg, cfg.global_batch, cfg.seq_len,
+                                 seed=cfg.seed)
+        self.ckpt = CheckpointManager(cfg.ckpt_dir, cfg.policy)
+        self._step_fn = jax.jit(build_train_step(
+            model, opt, self.schedule, cfg.microbatches))
+        self.state: Optional[TrainState] = None
+        self.metrics_log: list = []
+        self.shardings = shardings
+
+    # ------------------------------------------------------------------
+    def init(self) -> None:
+        params = self.model.init_params(jax.random.PRNGKey(self.cfg.seed))
+        mu, nu = init_moments(params, self.opt)
+        self.state = new_state(params, mu, nu, self.cfg.seed)
+
+    def state_spec(self) -> TrainState:
+        params = jax.eval_shape(
+            lambda: self.model.init_params(jax.random.PRNGKey(0)))
+        mu = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(s.shape,
+                                           np.dtype(self.opt.moment_dtype)),
+            params)
+        return TrainState(
+            params=params, mu=mu, nu=mu,
+            step=jax.ShapeDtypeStruct((), np.int32),
+            data_seed=jax.ShapeDtypeStruct((), np.int32),
+            rng=jax.ShapeDtypeStruct((2,), np.uint32),
+        )
+
+    # ------------------------------------------------------------------
+    def run(self, steps: Optional[int] = None) -> Dict[str, float]:
+        assert self.state is not None, "call init() or resume() first"
+        steps = steps if steps is not None else self.cfg.steps
+        start = int(jax.device_get(self.state.step))
+        for s in range(start, start + steps):
+            batch = self.pipeline.batch_at(s)
+            t0 = time.perf_counter()
+            self.state, metrics = self._step_fn(self.state, batch)
+            metrics = {k: float(jax.device_get(v)) for k, v in metrics.items()}
+            dt = time.perf_counter() - t0
+            if self.cfg.deadline_s and dt > self.cfg.deadline_s:
+                raise TimeoutError(
+                    f"step {s} exceeded deadline ({dt:.1f}s) — respawn "
+                    f"from checkpoint")
+            metrics["step"] = s
+            metrics["sec"] = dt
+            self.metrics_log.append(metrics)
+            if self.cfg.ckpt_every and (s + 1) % self.cfg.ckpt_every == 0:
+                self.ckpt.save(self.state,
+                               blocking=not self.cfg.async_ckpt)
+        self.ckpt.wait()
+        return self.metrics_log[-1] if self.metrics_log else {}
+
+    # ------------------------------------------------------------------
+    def crash(self) -> None:
+        """Drop all volatile state (simulated preemption)."""
+        self.ckpt.wait()
+        self.state = None
+        self.pipeline.step = -1
+        self.pipeline.seed = -1
+
+    def resume(self) -> int:
+        """Restore from latest checkpoint; reconstruct DERIVABLE state."""
+        assert self.ckpt.valid(), "no valid checkpoint to resume from"
+        self.state = self.ckpt.restore(self.state_spec(), self.shardings)
+        step = int(jax.device_get(self.state.step))
+        seed = int(jax.device_get(self.state.data_seed))
+        # DERIVABLE reconstruction: pipeline cursor from essential scalars
+        self.pipeline.reconstruct_cursor(seed, step)
+        return step

@@ -1,0 +1,152 @@
+"""Distribution-layer tests that need no compilation: sharding
+divisibility for every (arch x fsdp) cell, pytree congruence of spec
+trees, and the HLO roofline analyzer on a fixture."""
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro import roofline as rl
+from repro.configs import base, registry
+from repro.dist import mesh as dmesh
+from repro.models import backbone as B
+
+AXIS_SIZE = {"data": 16, "model": 16, "pod": 2, None: 1}
+
+
+def _check_divisible(spec_tree, shape_tree, where):
+    specs = jax.tree.leaves(spec_tree, is_leaf=lambda x: isinstance(x, P))
+    shapes = [s.shape for s in jax.tree.leaves(shape_tree)]
+    assert len(specs) == len(shapes), where
+    for spec, shape in zip(specs, shapes):
+        for dim, ax in enumerate(spec):
+            if ax is None:
+                continue
+            axes = ax if isinstance(ax, tuple) else (ax,)
+            n = int(np.prod([AXIS_SIZE[a] for a in axes]))
+            assert shape[dim] % n == 0, (where, spec, shape, dim)
+
+
+@pytest.mark.parametrize("arch", list(registry.ARCHS))
+@pytest.mark.parametrize("fsdp", [False, True])
+def test_param_shardings_divide(arch, fsdp):
+    cfg = registry.get(arch)
+    specs = B.param_specs(cfg)
+    pspecs = dmesh.param_pspecs(cfg, fsdp)
+    # congruent trees
+    jax.tree.map(lambda a, b: None, specs, pspecs,
+                 is_leaf=lambda x: isinstance(x, P))
+    _check_divisible(pspecs, specs, (arch, fsdp))
+
+
+@pytest.mark.parametrize("arch", list(registry.ARCHS))
+def test_cache_shardings_divide(arch):
+    cfg = registry.get(arch)
+    mesh_like = type("M", (), {"axis_names": ("data", "model"),
+                               "shape": {"data": 16, "model": 16}})()
+    for shape in base.ALL_SHAPES:
+        if not registry.cell_supported(cfg, shape)[0]:
+            continue
+        if not shape.is_decode:
+            continue
+        cspecs = B.cache_specs(cfg, shape.global_batch, shape.seq_len)
+        pspecs = dmesh.cache_pspecs(cfg, mesh_like, shape.global_batch)
+        jax.tree.map(lambda a, b: None, cspecs, pspecs,
+                     is_leaf=lambda x: isinstance(x, P))
+        _check_divisible(pspecs, cspecs, (arch, shape.name))
+
+
+def test_fsdp_threshold():
+    assert not dmesh.use_fsdp(registry.get("hymba-1.5b"))
+    assert dmesh.use_fsdp(registry.get("gemma3-27b"))
+    assert dmesh.use_fsdp(registry.get("llama4-maverick-400b-a17b"))
+
+
+# ------------------------------------------------------------- analyzer
+
+HLO_FIXTURE = """\
+HloModule jit_f, entry_computation_layout={()->f32[8,128]{1,0}}
+
+%wide.body (param: (s32[], f32[8,128])) -> (s32[], f32[8,128]) {
+  %param = (s32[], f32[8,128]) parameter(0)
+  %gte.0 = s32[] get-tuple-element(%param), index=0
+  %gte.1 = f32[8,128]{1,0} get-tuple-element(%param), index=1
+  %w = f32[128,128]{1,0} constant({...})
+  %dot.1 = f32[8,128]{1,0} dot(%gte.1, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ar = f32[8,128]{1,0} all-reduce(%dot.1), channel_id=1, replica_groups=[2,4]<=[8], to_apply=%sum
+  %one = s32[] constant(1)
+  %next = s32[] add(%gte.0, %one)
+  ROOT %tuple.1 = (s32[], f32[8,128]) tuple(%next, %ar)
+}
+
+%wide.cond (param.1: (s32[], f32[8,128])) -> pred[] {
+  %param.1 = (s32[], f32[8,128]) parameter(0)
+  %gte.2 = s32[] get-tuple-element(%param.1), index=0
+  %bound = s32[] constant(6)
+  ROOT %lt = pred[] compare(%gte.2, %bound), direction=LT
+}
+
+%sum (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %s = f32[] add(%a, %b)
+}
+
+ENTRY %main.1_spmd () -> f32[8,128] {
+  %c0 = s32[] constant(0)
+  %x0 = f32[8,128]{1,0} constant({...})
+  %t0 = (s32[], f32[8,128]) tuple(%c0, %x0)
+  %while.1 = (s32[], f32[8,128]) while(%t0), condition=%wide.cond, body=%wide.body, backend_config={"known_trip_count":{"n":"6"}}
+  ROOT %out = f32[8,128]{1,0} get-tuple-element(%while.1), index=1
+}
+"""
+
+
+def test_analyzer_trip_count_multiplication():
+    an = rl.HloAnalyzer(HLO_FIXTURE, n_devices=8)
+    c = an.entry()
+    # 6 iterations x (2 * 8 * 128 * 128) dot flops
+    assert c.dot_flops == 6 * 2 * 8 * 128 * 128
+    # all-reduce payload: 8*128*4 bytes, weight 2, x6 trips
+    assert c.coll_bytes == 6 * 2 * 8 * 128 * 4
+    assert c.coll_ops == {"all-reduce": 6.0}
+
+
+def test_analyzer_trip_count_from_condition():
+    # strip backend_config: falls back to the condition constant
+    fixture = HLO_FIXTURE.replace(
+        ', backend_config={"known_trip_count":{"n":"6"}}', "")
+    an = rl.HloAnalyzer(fixture, n_devices=8)
+    c = an.entry()
+    assert c.dot_flops == 6 * 2 * 8 * 128 * 128
+
+
+def test_analyzer_pod_spanning_groups():
+    # replica_groups=[2,4]<=[8]: rows of 4 consecutive ids; with pod_size 4
+    # no group crosses a pod; with pod_size 2 every group does.
+    an_intra = rl.HloAnalyzer(HLO_FIXTURE, n_devices=8, pod_size=4)
+    c = an_intra.entry()
+    assert c.coll_bytes > 0 and c.coll_bytes_dcn == 0
+    an_cross = rl.HloAnalyzer(HLO_FIXTURE, n_devices=8, pod_size=2)
+    c2 = an_cross.entry()
+    assert c2.coll_bytes == 0 and c2.coll_bytes_dcn > 0
+
+
+def test_shape_bytes_tuple_and_layout():
+    assert rl._shape_bytes("f32[8,128]{1,0}") == 8 * 128 * 4
+    assert rl._shape_bytes("(s32[], f32[2,2]{1,0}, bf16[4]{0})") == \
+        4 + 16 + 8
+    assert rl._shape_bytes("pred[10]") == 10
+
+
+def test_roofline_terms_math():
+    r = rl.Roofline(
+        compute_s=2.0, memory_s=1.0, collective_s=0.5,
+        dot_flops=2.0 * rl.PEAK_FLOPS, hbm_bytes=rl.HBM_BW,
+        coll_bytes=0.5 * rl.ICI_BW, coll_bytes_dcn=0, coll_ops={},
+        raw_cost_flops=0, raw_cost_bytes=0,
+        model_flops=2.0 * rl.PEAK_FLOPS * 256, n_devices=256)
+    assert r.dominant == "compute"
+    assert r.step_seconds == 2.0
+    assert abs(r.useful_flops_ratio - 1.0) < 1e-9
+    assert abs(r.mfu - 1.0) < 1e-9

@@ -1,0 +1,164 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode on CPU).
+
+Sweeps shapes/dtypes per kernel and asserts allclose against ref.py.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import hash_probe, ops, pack_flush, quant_pack, ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+# ---------------------------------------------------------------- pack
+
+@pytest.mark.parametrize("n,d", [(8, 128), (64, 256), (33, 384), (128, 512)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16, jnp.int32])
+def test_pack_rows_sweep(n, d, dtype):
+    src = (jax.random.normal(KEY, (n, d)) * 10).astype(dtype)
+    idx = jnp.asarray(
+        np.random.default_rng(1).choice(n + 1, size=min(n, 16)) - 1,
+        jnp.int32)  # includes -1 sentinels
+    got = pack_flush.pack_rows(src, idx, interpret=True)
+    want = ref.pack_rows_ref(src, idx)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("n,d", [(16, 128), (64, 512), (40, 896)])
+def test_scatter_rows_roundtrip(n, d):
+    src = jax.random.normal(KEY, (n, d))
+    m = n // 2
+    idx = jnp.asarray(np.random.default_rng(2).choice(n, m, replace=False),
+                      jnp.int32)
+    packed = pack_flush.pack_rows(src, idx, block_d=128, interpret=True)
+    dst = jnp.zeros((n, d))
+    got = pack_flush.scatter_rows(dst, packed, idx, block_d=128,
+                                  interpret=True)
+    want = ref.scatter_rows_ref(dst, packed, idx)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    # scatter(pack(x)) restores exactly the selected rows
+    np.testing.assert_array_equal(np.asarray(got[idx]), np.asarray(src[idx]))
+
+
+def test_pack_unaligned_width_via_ops():
+    """ops.pack_rows pads non-128-multiple widths (the Fig-12 alignment
+    path) and unpads the result."""
+    src = jax.random.normal(KEY, (32, 300))
+    idx = jnp.array([3, 1, -1, 31], jnp.int32)
+    got = ops.pack_rows(src, idx)
+    want = ref.pack_rows_ref(src, idx)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want))
+
+
+# ------------------------------------------------------------ quantize
+
+@pytest.mark.parametrize("n,d", [(8, 256), (64, 512), (16, 2048)])
+@pytest.mark.parametrize("scale", [1e-3, 1.0, 1e3])
+def test_quantize_blockwise_sweep(n, d, scale):
+    x = jax.random.normal(KEY, (n, d)) * scale
+    q, s = quant_pack.quantize_blockwise(x, interpret=True)
+    qr, sr = ref.quantize_blockwise_ref(x)
+    np.testing.assert_array_equal(np.asarray(q), np.asarray(qr))
+    np.testing.assert_allclose(np.asarray(s), np.asarray(sr), rtol=1e-6)
+    # dequant error bound: |x - dq| <= scale_per_group (1/127 of absmax)
+    dq = quant_pack.dequantize_blockwise(q, s, interpret=True)
+    err = np.abs(np.asarray(x) - np.asarray(dq))
+    bound = np.repeat(np.asarray(s), quant_pack.GROUP, axis=1) * 0.5001
+    assert (err <= bound + 1e-9).all()
+
+
+def test_quantize_leaf_any_shape():
+    for shape in [(7,), (3, 5), (2, 3, 4, 5), ()]:
+        x = jax.random.normal(KEY, shape) * 3
+        q, s = ops.quantize_leaf(x)
+        back = ops.dequantize_leaf(q, s, x.shape, x.dtype)
+        assert back.shape == x.shape
+        np.testing.assert_allclose(np.asarray(back), np.asarray(x),
+                                   atol=0.05 * max(1.0, float(jnp.max(jnp.abs(x)) if x.size else 0.0)))
+
+
+# ---------------------------------------------------------- hash probe
+
+def test_hash_probe_matches_ref():
+    nb = 64
+    rng = np.random.default_rng(3)
+    table = np.full((nb, hash_probe.BUCKET), -1, np.int32)
+    keys = rng.choice(100000, 500, replace=False).astype(np.int32)
+    # place each key in its hash bucket (first free lane)
+    for k in keys:
+        b = int(np.asarray(ops.hash32(jnp.asarray([k]))[0]) % nb)
+        lane = int(np.argmax(table[b] == -1))
+        table[b, lane] = k
+    tbl = jnp.asarray(table)
+    queries = jnp.asarray(np.concatenate([keys[:64],
+                                          keys[:32] + 1000000]), jnp.int32)
+    h = ops.hash32(queries)
+    bids = (h % jnp.uint32(nb)).astype(jnp.int32)
+    got = hash_probe.probe(tbl, queries, bids, interpret=True)
+    want = ref.probe_ref(tbl, queries, bids)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    # present keys found, absent -> -1
+    assert (np.asarray(got[:64]) >= 0).all()
+    assert (np.asarray(got[64:]) == -1).all()
+
+
+def test_hash_lookup_end_to_end():
+    nb = 32
+    keys = jnp.arange(100, 150, dtype=jnp.int32)
+    table = np.full((nb, hash_probe.BUCKET), -1, np.int32)
+    for k in np.asarray(keys):
+        b = int(np.asarray(ops.hash32(jnp.asarray([k]))[0]) % nb)
+        table[b, np.argmax(table[b] == -1)] = k
+    got = ops.hash_lookup(jnp.asarray(table),
+                          jnp.array([100, 149, 999], jnp.int32))
+    g = np.asarray(got)
+    assert g[0] >= 0 and g[1] >= 0 and g[2] == -1
+
+
+# ------------------------------------------------------- flash attention
+
+@pytest.mark.parametrize("h,sq,skv,d,bq,bk,causal", [
+    (2, 256, 256, 64, 128, 128, True),
+    (3, 128, 128, 128, 64, 32, True),
+    (1, 256, 512, 64, 128, 128, False),
+    (4, 64, 64, 32, 64, 64, True),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(h, sq, skv, d, bq, bk, causal, dtype):
+    from repro.kernels.flash_attention import flash_attention
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (h, sq, d)).astype(dtype)
+    k = jax.random.normal(ks[1], (h, skv, d)).astype(dtype)
+    v = jax.random.normal(ks[2], (h, skv, d)).astype(dtype)
+    got = flash_attention(q, k, v, causal=causal, block_q=bq, block_k=bk,
+                          interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=causal)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=tol, rtol=tol)
+
+
+def test_flash_attention_matches_model_blockwise():
+    """The Pallas kernel and the model's XLA blockwise path agree."""
+    from repro.kernels.flash_attention import flash_attention
+    from repro.models import layers as L
+    b, s, nk, g, dh = 1, 128, 2, 2, 32
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (b, s, nk, g, dh))
+    k = jax.random.normal(ks[1], (b, s, nk, dh))
+    v = jax.random.normal(ks[2], (b, s, nk, dh))
+    want = L.blockwise_attention(q, k, v, causal=True, q_block=64,
+                                 kv_block=64)
+    # kernel layout: fold (B,K,G) into H; repeat K/V per query group
+    qh = q.transpose(0, 2, 3, 1, 4).reshape(b * nk * g, s, dh)
+    kh = jnp.repeat(k.transpose(0, 2, 1, 3), g, axis=1
+                    ).reshape(b * nk * g, s, dh)
+    vh = jnp.repeat(v.transpose(0, 2, 1, 3), g, axis=1
+                    ).reshape(b * nk * g, s, dh)
+    got = flash_attention(qh, kh, vh, causal=True, block_q=64, block_k=64)
+    got = got.reshape(b, nk, g, s, dh).transpose(0, 3, 1, 2, 4)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=3e-5, rtol=3e-5)

@@ -1,0 +1,166 @@
+"""Property-based tests (hypothesis): random op sequences against pure
+python reference models, with a crash+reconstruct inserted at an arbitrary
+point.  The system invariant under test is the paper's central claim:
+
+    reconstruct(persist(partly)) == live state == reconstruct(persist(full))
+
+and flush accounting: lines(partly) <= lines(full) for the same op trace.
+"""
+import numpy as np
+from hypothesis import HealthCheck, given, settings
+from hypothesis import strategies as st
+
+from repro.core.arena import open_arena
+from repro.pstruct.bptree import BPTree
+from repro.pstruct.dll import DoublyLinkedList
+from repro.pstruct.hashmap import Hashmap
+
+SETTINGS = dict(max_examples=40, deadline=None,
+                suppress_health_check=[HealthCheck.too_slow])
+
+
+# ---------------------------------------------------------------- hashmap
+
+hm_ops = st.lists(
+    st.tuples(st.sampled_from(["insert", "remove", "crash"]),
+              st.lists(st.integers(0, 200), min_size=1, max_size=20)),
+    min_size=1, max_size=24)
+
+
+@given(ops=hm_ops)
+@settings(**SETTINGS)
+def test_hashmap_matches_dict(ops):
+    ref = {}
+    lines = {}
+    for mode in ("partly", "full"):
+        a = open_arena(None, Hashmap.layout(1024, mode))
+        h = Hashmap(a, 1024, mode)
+        ref = {}
+        for op, keys in ops:
+            k = np.asarray(keys, np.int64)
+            if op == "insert":
+                v = np.stack([np.arange(7, dtype=np.int64) + kk for kk in k])
+                h.insert_batch(k, v)
+                for kk, vv in zip(k.tolist(), v):
+                    ref[kk] = vv
+            elif op == "remove":
+                h.remove_batch(k)
+                for kk in k.tolist():
+                    ref.pop(kk, None)
+            else:
+                a.commit()
+                a.crash()
+                a.reopen()
+                h.reconstruct()
+            assert h.check_against(ref)
+        lines[mode] = a.stats.lines
+    assert lines["partly"] <= lines["full"]
+
+
+# ---------------------------------------------------------------- bptree
+
+bt_ops = st.lists(
+    st.tuples(st.sampled_from(["insert", "delete", "crash"]),
+              st.lists(st.integers(0, 400), min_size=1, max_size=30)),
+    min_size=1, max_size=20)
+
+
+@given(ops=bt_ops)
+@settings(**SETTINGS)
+def test_bptree_matches_dict(ops):
+    for mode in ("partly", "full"):
+        a = open_arena(None, BPTree.layout(1024, 4096, mode))
+        t = BPTree(a, 1024, 4096, mode)
+        ref = {}
+        for op, keys in ops:
+            k = np.asarray(keys, np.int64)
+            if op == "insert":
+                v = np.stack([np.arange(7, dtype=np.int64) * kk for kk in k])
+                t.insert_batch(k, v)
+                # batch dedup keeps last occurrence
+                for kk, vv in zip(k.tolist(), v):
+                    ref[kk] = vv
+            elif op == "delete":
+                t.delete_batch(k)
+                for kk in k.tolist():
+                    ref.pop(kk, None)
+            else:
+                a.commit()
+                a.crash()
+                a.reopen()
+                t.reconstruct()
+            t.check_invariants()
+            if ref:
+                rk = np.fromiter(ref.keys(), np.int64, len(ref))
+                ok, vals = t.find_batch(rk)
+                assert ok.all()
+                want = np.stack([ref[int(x)] for x in rk])
+                assert (vals == want).all()
+            gone = np.asarray([x for x in range(0, 401, 37)
+                               if x not in ref], np.int64)
+            if gone.size:
+                ok, _ = t.find_batch(gone)
+                assert not ok.any()
+
+
+# ---------------------------------------------------------------- dll
+
+dll_ops = st.lists(
+    st.tuples(st.sampled_from(["append", "pop", "crash"]),
+              st.integers(1, 12)),
+    min_size=1, max_size=24)
+
+
+@given(ops=dll_ops)
+@settings(**SETTINGS)
+def test_dll_matches_list(ops):
+    a = open_arena(None, DoublyLinkedList.layout(1024, "partly"))
+    d = DoublyLinkedList(a, 1024, "partly")
+    ref = []          # list of data rows in order
+    ctr = 0
+    for op, n in ops:
+        if op == "append":
+            vals = np.arange(n * 7, dtype=np.int64).reshape(n, 7) + ctr
+            ctr += n * 7
+            d.append_batch(vals)
+            ref.extend(vals.tolist())
+        elif op == "pop":
+            m = min(n, len(ref))
+            if m:
+                d.pop_front_batch(m)
+                ref = ref[m:]
+        else:
+            a.commit()
+            a.crash()
+            a.reopen()
+            d.reconstruct()
+        assert d.count == len(ref)
+        if ref:
+            order = d.to_list()
+            assert d.data[order].tolist() == ref
+            # prev chain is the exact mirror of next
+            assert d.prev[order[0]] == -1
+            assert (d.prev[order[1:]] == order[:-1]).all()
+
+
+# ---------------------------------------------------------------- arena
+
+@given(rows=st.lists(st.integers(0, 63), min_size=1, max_size=40),
+       rowbytes_pow=st.integers(3, 7))
+@settings(max_examples=30, deadline=None)
+def test_arena_line_accounting(rows, rowbytes_pow):
+    """Distinct-line accounting: flushing R unique rows of 2^k bytes costs
+    exactly the number of distinct 64B lines those rows touch."""
+    rowlen = 2 ** rowbytes_pow  # bytes per row (8..128)
+    words = rowlen // 8
+    a = open_arena(None, {"r": (np.int64, (64, words))})
+    r = a.regions["r"]
+    r.persist_rows(np.asarray(rows, np.int64))
+    uniq = np.unique(rows)
+    base = r.offset
+    starts = (base + uniq * rowlen) // 64
+    ends = (base + (uniq + 1) * rowlen - 1) // 64
+    expect = len(set(int(x) for lo, hi in zip(starts, ends)
+                     for x in range(lo, hi + 1)))
+    assert a.stats.lines == expect
+    assert a.stats.bytes == len(uniq) * rowlen

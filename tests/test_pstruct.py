@@ -1,0 +1,238 @@
+"""Unit tests for the three partly-persistent structures (paper §IV).
+
+Every test runs BOTH modes and asserts:
+  * functional equivalence with a pure-python reference,
+  * crash + reconstruct restores exactly the live state (§V-G),
+  * partly persists strictly fewer flush lines than fully (§V-B..D).
+"""
+import numpy as np
+import pytest
+
+from repro.core.arena import open_arena
+from repro.pstruct.bptree import BPTree
+from repro.pstruct.dll import DoublyLinkedList, order_from_next
+from repro.pstruct.hashmap import Hashmap
+
+MODES = ("partly", "full")
+
+
+# ---------------------------------------------------------------- DLL
+
+
+def make_dll(mode, cap=512):
+    a = open_arena(None, DoublyLinkedList.layout(cap, mode))
+    return a, DoublyLinkedList(a, cap, mode)
+
+
+@pytest.mark.parametrize("mode", MODES)
+def test_dll_append_pop_delete(mode, rng):
+    a, d = make_dll(mode)
+    ids1 = d.append_batch(rng.integers(0, 99, (20, 7)))
+    assert d.count == 20 and d.head == ids1[0] and d.tail == ids1[-1]
+    popped = d.pop_front_batch(5)
+    assert (popped == ids1[:5]).all() and d.count == 15
+    d.delete_batch(ids1[10:12])
+    assert d.count == 13
+    order = d.to_list()
+    want = [i for i in ids1.tolist() if i not in
+            set(ids1[:5].tolist()) | set(ids1[10:12].tolist())]
+    assert order.tolist() == want
+    # slot reuse after free
+    ids2 = d.append_batch(rng.integers(0, 99, (6, 7)))
+    assert set(ids2.tolist()) & (set(popped.tolist())
+                                 | set(ids1[10:12].tolist()))
+
+
+@pytest.mark.parametrize("mode", MODES)
+def test_dll_crash_reconstruct(mode, rng):
+    a, d = make_dll(mode)
+    ids = d.append_batch(rng.integers(0, 99, (50, 7)))
+    d.pop_front_batch(7)
+    d.delete_batch(ids[20:30])
+    order0, prev0, tail0 = d.to_list().copy(), d.prev.copy(), d.tail
+    data0 = d.data.copy()
+    a.commit()
+    a.crash()
+    assert (d.nodes.vol == 0).all()          # volatile state really gone
+    a.reopen()
+    d.reconstruct()
+    order1 = d.to_list()
+    live = np.zeros(d.capacity, bool)
+    live[order1] = True
+    assert (order1 == order0).all()
+    assert (d.prev[live] == prev0[live]).all()
+    assert d.tail == tail0
+    assert (d.data[order1] == data0[order0]).all()
+
+
+def test_dll_partly_flushes_fewer_lines(rng):
+    vals = rng.integers(0, 99, (200, 7))
+    lines = {}
+    for mode in MODES:
+        a, d = make_dll(mode, cap=256)
+        d.append_batch(vals)
+        lines[mode] = a.stats.lines
+    # partly: 1 line/node; fully: 2 lines/node (prev on the 2nd line)
+    assert lines["partly"] < lines["full"]
+    assert lines["full"] >= 2 * (lines["partly"] - 2)
+
+
+def test_order_from_next_matches_walk(rng):
+    n = 64
+    perm = rng.permutation(n)
+    nxt = np.full(n, -1, np.int64)
+    nxt[perm[:-1]] = perm[1:]
+    got = order_from_next(nxt, int(perm[0]), n)
+    assert (got == perm).all()
+
+
+# ---------------------------------------------------------------- B+Tree
+
+
+def make_bt(mode, cap_nodes=2048, cap_recs=8192):
+    a = open_arena(None, BPTree.layout(cap_nodes, cap_recs, mode))
+    return a, BPTree(a, cap_nodes, cap_recs, mode)
+
+
+@pytest.mark.parametrize("mode", MODES)
+def test_bptree_insert_find_delete(mode, rng):
+    a, t = make_bt(mode)
+    keys = rng.permutation(2000).astype(np.int64)
+    vals = rng.integers(0, 1 << 40, (2000, 7)).astype(np.int64)
+    for i in range(0, 2000, 137):
+        t.insert_batch(keys[i:i + 137], vals[i:i + 137])
+    t.check_invariants()
+    ok, got = t.find_batch(keys)
+    assert ok.all() and (got == vals).all()
+    # update-in-place
+    t.insert_batch(keys[:10], vals[:10] + 1)
+    _, got = t.find_batch(keys[:10])
+    assert (got == vals[:10] + 1).all()
+    # delete
+    rm = t.delete_batch(keys[:500])
+    assert rm.all()
+    t.check_invariants()
+    ok, _ = t.find_batch(keys[:500])
+    assert not ok.any()
+    ok, got = t.find_batch(keys[500:])
+    assert ok.all() and (got == vals[500:]).all()
+
+
+@pytest.mark.parametrize("mode", MODES)
+def test_bptree_crash_reconstruct(mode, rng):
+    a, t = make_bt(mode)
+    keys = rng.permutation(3000).astype(np.int64)
+    vals = rng.integers(0, 1 << 40, (3000, 7)).astype(np.int64)
+    t.insert_batch(keys, vals)
+    t.delete_batch(keys[:777])
+    a.commit()
+    a.crash()
+    a.reopen()
+    t.reconstruct()
+    t.check_invariants()
+    ok, got = t.find_batch(keys[777:])
+    assert ok.all() and (got == vals[777:]).all()
+    ok, _ = t.find_batch(keys[:777])
+    assert not ok.any()
+    # structure is writable after reconstruction (free lists correct)
+    t.insert_batch(keys[:777], vals[:777])
+    t.check_invariants()
+    ok, _ = t.find_batch(keys)
+    assert ok.all()
+
+
+def test_bptree_partly_flushes_fewer_lines(rng):
+    keys = rng.permutation(4000).astype(np.int64)
+    vals = rng.integers(0, 9, (4000, 7)).astype(np.int64)
+    lines = {}
+    for mode in MODES:
+        a, t = make_bt(mode, 4096, 8192)
+        for i in range(0, 4000, 100):
+            t.insert_batch(keys[i:i + 100], vals[i:i + 100])
+        lines[mode] = a.stats.lines
+    assert lines["partly"] < lines["full"]
+
+
+# ---------------------------------------------------------------- Hashmap
+
+
+def make_hm(mode, cap=4096):
+    a = open_arena(None, Hashmap.layout(cap, mode))
+    return a, Hashmap(a, cap, mode)
+
+
+@pytest.mark.parametrize("mode", MODES)
+def test_hashmap_insert_find_remove(mode, rng):
+    a, h = make_hm(mode)
+    keys = rng.choice(10 ** 6, 3000, replace=False).astype(np.int64)
+    vals = rng.integers(0, 1 << 40, (3000, 7)).astype(np.int64)
+    h.insert_batch(keys, vals)
+    assert h.size == 3000
+    ok, got = h.find_batch(keys)
+    assert ok.all() and (got == vals).all()
+    # update
+    h.insert_batch(keys[:50], vals[:50] * 2)
+    _, got = h.find_batch(keys[:50])
+    assert (got == vals[:50] * 2).all()
+    # absent keys
+    ok, _ = h.find_batch(keys[:10] + 10 ** 7)
+    assert not ok.any()
+    # remove
+    rm = h.remove_batch(keys[:1000])
+    assert rm.all() and h.size == 2000
+    ok, _ = h.find_batch(keys[:1000])
+    assert not ok.any()
+
+
+@pytest.mark.parametrize("mode", MODES)
+def test_hashmap_crash_reconstruct(mode, rng):
+    a, h = make_hm(mode)
+    keys = rng.choice(10 ** 6, 2500, replace=False).astype(np.int64)
+    vals = rng.integers(0, 1 << 40, (2500, 7)).astype(np.int64)
+    h.insert_batch(keys, vals)
+    h.remove_batch(keys[:500])
+    ref = {int(k): vals[i] for i, k in enumerate(keys) if i >= 500}
+    a.commit()
+    a.crash()
+    a.reopen()
+    h.reconstruct()
+    assert h.check_against(ref)
+    # writable post-reconstruction
+    h.insert_batch(keys[:500], vals[:500])
+    ok, got = h.find_batch(keys)
+    assert ok.all() and (got == vals).all()
+
+
+def test_hashmap_partly_flushes_fewer_lines(rng):
+    keys = rng.choice(10 ** 6, 3000, replace=False).astype(np.int64)
+    vals = rng.integers(0, 9, (3000, 7)).astype(np.int64)
+    lines = {}
+    for mode in MODES:
+        a, h = make_hm(mode)
+        h.insert_batch(keys, vals)
+        h.remove_batch(keys[:500])
+        lines[mode] = a.stats.lines
+    assert lines["partly"] < lines["full"]
+
+
+# ------------------------------------------------- corruption (paper §V-G)
+
+
+@pytest.mark.parametrize("mode", ["partly"])
+def test_corruption_before_flush_not_persisted(mode, rng):
+    """The paper's §V-G experiment: volatile corruption injected before a
+    flush must not reach persistent state; recovery restores the last
+    committed state exactly."""
+    a, d = make_dll(mode)
+    ids = d.append_batch(rng.integers(0, 99, (30, 7)))
+    a.commit()
+    order0, data0 = d.to_list().copy(), d.data.copy()
+    # corrupt volatile structure WITHOUT flushing: next points to itself
+    d.nodes.vol[ids[5], 7] = ids[5]
+    d.prev[ids[3]] = ids[3]
+    a.crash()
+    a.reopen()
+    d.reconstruct()
+    order1 = d.to_list()
+    assert (order1 == order0).all()
+    assert (d.data[order1] == data0[order1]).all()
