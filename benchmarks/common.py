@@ -43,6 +43,8 @@ class Cell:
     flush_s: float
     lines: int
     bytes: int
+    saved_lines: int = 0   # epoch write-set dedup vs per-call accounting
+    dedup_rows: int = 0    # duplicate row marks absorbed per epoch
 
     @property
     def flush_frac(self) -> float:
@@ -137,7 +139,8 @@ def run_workload(kind: str, mode: str, workload: str, n_init: int,
     wall = time.perf_counter() - t0
     d = a.stats.delta(base_stats)
     return Cell(kind, mode, workload, n_ops, wall,
-                d.fence_ns * 1e-9, d.lines, d.bytes)
+                d.fence_ns * 1e-9, d.lines, d.bytes,
+                saved_lines=d.saved_lines, dedup_rows=d.dedup_rows)
 
 
 def fmt_table(rows: List[Dict], cols: List[str]) -> str:

@@ -79,6 +79,10 @@ def _workload_fig(workload: str, n_init: int, n_ops: int) -> List[Dict]:
             "partly_flush%": f"{100 * partly.flush_frac:.0f}%",
             "full_lines": full.lines, "partly_lines": partly.lines,
             "line_save": f"{(1 - partly.lines / max(full.lines, 1)) * 100:.0f}%",
+            # epoch write-set dedup (lines the pre-batching per-call
+            # accounting would have charged on top of partly_lines)
+            "batch_save_lines": partly.saved_lines,
+            "dedup_rows": partly.dedup_rows,
         })
     return rows
 

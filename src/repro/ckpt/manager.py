@@ -37,6 +37,7 @@ import numpy as np
 
 from repro.core import policy as pol
 from repro.core import reconstruct as rec
+from repro.core.writeset import DigestWriteSet
 from repro.kernels import ops as kops
 from repro.train.state import TrainState
 
@@ -68,7 +69,10 @@ class CheckpointManager:
         self.use_pack_kernel = use_pack_kernel
         os.makedirs(directory, exist_ok=True)
         self._writer: Optional[threading.Thread] = None
-        self._last_digests: Dict[str, str] = {}
+        # Leaf-granularity write set: digests decide which leaves are
+        # dirty this epoch ("don't persist what didn't change") — same
+        # discipline as the arena's row write set (DESIGN.md §2).
+        self._writeset = DigestWriteSet()
         self.last_report: Optional[SaveReport] = None
 
     # ------------------------------------------------------------------ save
@@ -111,16 +115,18 @@ class CheckpointManager:
             digest = hashlib.md5(
                 b"".join(v.tobytes() for v in host.values())).hexdigest()
             entry["digest"] = digest
-            if (self.incremental
-                    and self._last_digests.get(p.path) == digest
-                    and os.path.exists(os.path.join(self.dir, entry["file"]))):
-                bytes_skipped_unchanged += nbytes
-                manifest["leaves"][p.path] = entry
-                continue
+            if self.incremental:
+                present = os.path.exists(
+                    os.path.join(self.dir, entry["file"]))
+                if not self._writeset.dirty(p.path, digest, present):
+                    bytes_skipped_unchanged += nbytes
+                    manifest["leaves"][p.path] = entry
+                    continue
+            else:
+                self._writeset.note(p.path, digest)
             to_write[p.path] = (host, entry)
             manifest["leaves"][p.path] = entry
             bytes_written += nbytes
-            self._last_digests[p.path] = digest
 
         def write():
             for path, (host, entry) in to_write.items():

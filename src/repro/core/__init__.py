@@ -2,6 +2,7 @@
 field classification, flush planning/accounting, persistent arena with
 commit protocol, and the reconstruction engine."""
 from repro.core.arena import LINE, Arena, FlushStats, open_arena  # noqa: F401
+from repro.core.writeset import DigestWriteSet, WriteSet  # noqa: F401
 from repro.core.policy import (  # noqa: F401
     FULLY_PERSISTENT,
     Kind,

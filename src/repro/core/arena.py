@@ -16,7 +16,11 @@ memory (Optane, mmap'd with MAP_SYNC).  Our TPU-cluster analogue (DESIGN.md
   backing file and only then sets the header's valid flag (the paper's
   "flag bit" + NVTree-style manifest-last ordering);
 * ``reopen()`` simulates the post-crash restart: all volatile state is
-  discarded and regions are reloaded from the file.
+  discarded and regions are reloaded from the file;
+* structures mark dirty rows (``Region.mark_rows``) into the arena's
+  write set inside an ``Arena.epoch()``; the epoch exit flushes once —
+  rows deduplicated, lines coalesced across the whole operation, data
+  regions before header regions (core/writeset.py, DESIGN.md §2).
 
 Byte/line counters are exact and medium-independent; wall-clock cost on this
 CPU host is the real memcpy+write cost, which scales linearly in flushed
@@ -26,6 +30,8 @@ paper's regime explicitly.
 """
 from __future__ import annotations
 
+import contextlib
+import dataclasses
 import json
 import os
 import struct
@@ -34,6 +40,8 @@ from dataclasses import dataclass, field
 from typing import Dict, Optional, Tuple
 
 import numpy as np
+
+from repro.core.writeset import WriteSet
 
 LINE = 64                 # flush granularity (bytes) — paper's cache line
 MEDIA_GRAIN = 256         # DCPMM internal granularity (§IV-D bucket sizing)
@@ -48,26 +56,34 @@ class FlushStats:
     bytes: int = 0
     calls: int = 0
     fence_ns: int = 0      # synthetic latency accumulated (if enabled)
+    # epoch-flush (write-set) counters — DESIGN.md §2
+    epochs: int = 0        # batched epoch flushes performed
+    marks: int = 0         # mark_rows calls absorbed by the write set
+    dedup_rows: int = 0    # row marks dropped as duplicates within an epoch
+    saved_lines: int = 0   # lines one accounting call PER MARK would have
+                           # charged minus lines the epoch flush charged
 
     def snapshot(self) -> "FlushStats":
-        return FlushStats(self.lines, self.bytes, self.calls, self.fence_ns)
+        return dataclasses.replace(self)
 
     def delta(self, since: "FlushStats") -> "FlushStats":
-        return FlushStats(self.lines - since.lines, self.bytes - since.bytes,
-                          self.calls - since.calls,
-                          self.fence_ns - since.fence_ns)
+        return FlushStats(*(getattr(self, f.name) - getattr(since, f.name)
+                            for f in dataclasses.fields(self)))
 
 
 class Region:
     """A named, row-structured persistent region."""
 
     def __init__(self, arena: "Arena", name: str, dtype, shape: Tuple[int, ...],
-                 offset: int):
+                 offset: int, meta: Optional[bool] = None):
         self.arena = arena
         self.name = name
         self.dtype = np.dtype(dtype)
         self.shape = tuple(shape)
         self.offset = offset
+        # Metadata regions (structure headers) flush AFTER data regions
+        # within an epoch — data-before-metadata ordering (DESIGN.md §2).
+        self.meta = name.endswith("header") if meta is None else meta
         self.rowbytes = int(self.dtype.itemsize * np.prod(shape[1:], dtype=np.int64)) \
             if len(shape) > 1 else self.dtype.itemsize
         self.nbytes = self.rowbytes * shape[0]
@@ -82,7 +98,9 @@ class Region:
         return flat.view(self.dtype).reshape(self.shape)
 
     def persist_rows(self, rows: np.ndarray) -> None:
-        """Flush the given row indices (volatile -> persistent)."""
+        """Flush the given row indices (volatile -> persistent) NOW, with
+        per-call line accounting.  Structure code should prefer
+        ``mark_rows`` so flushes batch per epoch."""
         rows = np.asarray(rows, np.int64)
         if rows.size == 0:
             return
@@ -90,6 +108,20 @@ class Region:
         pv = self._pview()
         pv[rows] = self.vol[rows]
         self.arena._account_rows(self.offset, self.rowbytes, rows)
+
+    def mark_rows(self, rows: np.ndarray) -> None:
+        """Add rows to the arena's write set (flushed once, deduplicated,
+        when the enclosing epoch closes).  Outside any epoch this
+        degrades to an immediate ``persist_rows`` — per-op call sites
+        behave identically either way."""
+        if self.arena._epoch_depth > 0:
+            self.arena.writeset.mark(self, np.asarray(rows, np.int64))
+        else:
+            self.persist_rows(rows)
+
+    def mark_range(self, lo: int, hi: int) -> None:
+        if hi > lo:
+            self.mark_rows(np.arange(lo, hi, dtype=np.int64))
 
     def persist_range(self, lo: int, hi: int) -> None:
         if hi <= lo:
@@ -110,25 +142,47 @@ class Region:
 class Arena:
     """File-backed persistent arena with flush accounting."""
 
-    def __init__(self, path: Optional[str], synth_line_ns: float = 0.0):
+    def __init__(self, path: Optional[str], synth_line_ns: float = 0.0,
+                 pack_flush_rows: int = 0):
         self.path = path
         self.regions: Dict[str, Region] = {}
         self.stats = FlushStats()
         self.synth_line_ns = synth_line_ns
+        # >0: epoch flushes of at least this many rows gather through the
+        # Pallas pack_flush kernel (tile-aligned staging buffer).
+        self.pack_flush_rows = pack_flush_rows
+        self.writeset = WriteSet(self)
+        self._epoch_depth = 0
         self._layout_final = False
         self._mm: Optional[np.memmap] = None
         self._cursor = 4096  # header page
         self._meta: Dict[str, dict] = {}
         self.generation = 0
 
+    # -- epochs -----------------------------------------------------------
+    @contextlib.contextmanager
+    def epoch(self):
+        """One logical operation: ``mark_rows`` calls inside the block
+        accumulate in the write set; the outermost epoch exit flushes
+        them once (rows deduplicated, lines coalesced across the op,
+        data regions before metadata regions)."""
+        self._epoch_depth += 1
+        try:
+            yield self
+        finally:
+            self._epoch_depth -= 1
+            if self._epoch_depth == 0:
+                self.writeset.flush()
+
     # -- layout -----------------------------------------------------------
-    def region(self, name: str, dtype, shape: Tuple[int, ...]) -> Region:
+    def region(self, name: str, dtype, shape: Tuple[int, ...],
+               meta: Optional[bool] = None) -> Region:
         assert not self._layout_final, "layout already finalized"
         assert name not in self.regions
         # Row-align every region to LINE so a row flush never straddles an
         # unrelated region (paper: __attribute__((aligned(64)))).
         self._cursor = _align(self._cursor, LINE)
-        r = Region(self, name, dtype, shape, self._cursor)
+        r = Region(self, name, dtype, shape, self._cursor, meta=meta)
         self._cursor += _align(r.nbytes, LINE)
         self.regions[name] = r
         self._meta[name] = {"dtype": np.dtype(dtype).str,
@@ -167,8 +221,11 @@ class Arena:
         return magic == _MAGIC and bool(valid)
 
     def commit(self) -> None:
-        """Data-before-metadata ordering: flush file contents, then set the
-        valid flag (the paper's initialization flag bit)."""
+        """Data-before-metadata ordering: drain the write set, flush file
+        contents, then set the valid flag (the paper's initialization
+        flag bit).  Inside an epoch this flushes the pending marks first,
+        so a commit never orders the flag ahead of its data."""
+        self.writeset.flush()
         if isinstance(self._mm, np.memmap):
             self._mm.flush()
         self.generation += 1
@@ -182,7 +239,11 @@ class Arena:
 
     # -- crash simulation ---------------------------------------------------
     def crash(self) -> None:
-        """Discard all volatile state (keep the backing file)."""
+        """Discard all volatile state (keep the backing file).  Pending
+        write-set marks die with the volatile state — power loss loses
+        un-flushed rows; it must never flush zeroed volatile copies over
+        committed data when a wrapping epoch unwinds."""
+        self.writeset.discard()
         for r in self.regions.values():
             r.vol = np.zeros(r.shape, r.dtype)
 
@@ -201,18 +262,22 @@ class Arena:
         self.stats.calls += 1
         self._synth(lines)
 
-    def _account_rows(self, base: int, rowbytes: int, rows: np.ndarray) -> None:
+    @staticmethod
+    def _rows_line_count(base: int, rowbytes: int, rows: np.ndarray) -> int:
+        """Distinct 64 B lines touched by flushing `rows` (sorted unique)."""
         if rowbytes % LINE == 0 and base % LINE == 0:
             # aligned rows: rows * rowbytes/LINE lines, coalescing irrelevant
-            lines = int(rows.size) * (rowbytes // LINE)
-        else:
-            # exact distinct-line count over sorted row intervals (adjacent
-            # rows may share a line — the Fig-12 unaligned-flush effect)
-            starts = (base + rows * rowbytes) // LINE
-            ends = (base + (rows + 1) * rowbytes - 1) // LINE
-            starts = np.maximum(starts,
-                                np.concatenate(([-1], ends[:-1])) + 1)
-            lines = int(np.sum(np.maximum(0, ends - starts + 1)))
+            return int(rows.size) * (rowbytes // LINE)
+        # exact distinct-line count over sorted row intervals (adjacent
+        # rows may share a line — the Fig-12 unaligned-flush effect)
+        starts = (base + rows * rowbytes) // LINE
+        ends = (base + (rows + 1) * rowbytes - 1) // LINE
+        starts = np.maximum(starts,
+                            np.concatenate(([-1], ends[:-1])) + 1)
+        return int(np.sum(np.maximum(0, ends - starts + 1)))
+
+    def _account_rows(self, base: int, rowbytes: int, rows: np.ndarray) -> None:
+        lines = self._rows_line_count(base, rowbytes, rows)
         self.stats.lines += lines
         self.stats.bytes += int(rows.size) * rowbytes
         self.stats.calls += 1

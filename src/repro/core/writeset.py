@@ -1,0 +1,148 @@
+"""Write-set / epoch-flush layer (paper §V-E, MOD-style minimal ordering).
+
+Structures no longer flush rows as they touch them.  Instead each logical
+operation opens an *epoch* (``Arena.epoch()``); every mutation marks its
+dirty rows into the arena's :class:`WriteSet`; when the outermost epoch
+closes (or ``Arena.commit`` runs) the write set flushes ONCE:
+
+* rows marked several times within the epoch are deduplicated;
+* adjacent dirty rows coalesce into distinct 64 B lines exactly once
+  across the whole operation — not once per ``persist_rows`` call;
+* data regions flush before metadata (header) regions, extending the
+  arena's data-before-metadata commit ordering into the epoch itself: a
+  crash mid-epoch leaves the previous header state reachable;
+* large row gathers can route through the Pallas ``pack_flush`` kernel
+  (tile-aligned staging buffer) when the arena enables it.
+
+Accounting: :class:`~repro.core.arena.FlushStats` gains per-epoch dedup
+counters.  ``saved_lines`` is the difference between what per-call
+accounting *would* have charged (one distinct-line count per mark, the
+pre-refactor behaviour) and what the batched epoch flush actually
+charged — the paper's redundant-flush overhead, measured directly.
+
+``DigestWriteSet`` is the file-granularity sibling used by
+``ckpt/manager.py``: leaves whose content digest is unchanged since the
+last flush are dropped from the write set ("don't persist what didn't
+change"), unifying the checkpoint manager's incremental mode with the
+row-granularity tracker here.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+__all__ = ["WriteSet", "DigestWriteSet"]
+
+
+class WriteSet:
+    """Per-arena dirty-row tracker with epoch-batched flushing."""
+
+    def __init__(self, arena):
+        self.arena = arena
+        # region name -> list of (unique row arrays, per-call line cost)
+        self._pending: Dict[str, List[Tuple[np.ndarray, int]]] = {}
+
+    # ------------------------------------------------------------- mark
+    def mark(self, region, rows: np.ndarray) -> None:
+        """Record dirty rows of `region`; flushed at epoch close."""
+        rows = np.unique(np.asarray(rows, np.int64))
+        if rows.size == 0:
+            return
+        would = self.arena._rows_line_count(region.offset, region.rowbytes,
+                                            rows)
+        self._pending.setdefault(region.name, []).append((rows, would))
+        self.arena.stats.marks += 1
+
+    def __bool__(self) -> bool:
+        return bool(self._pending)
+
+    def discard(self) -> None:
+        """Drop all pending marks without flushing (crash simulation)."""
+        self._pending.clear()
+
+    # ------------------------------------------------------------ flush
+    def flush(self, include_meta: bool = True) -> None:
+        """Flush all pending marks: dedup rows, account distinct lines
+        once, copy volatile -> persistent.  Data regions first, then
+        metadata regions (headers); ``include_meta=False`` flushes only
+        the data half and DROPS the metadata marks — the crash-injection
+        point used by recovery tests."""
+        if not self._pending:
+            return
+        arena = self.arena
+        names = list(self._pending)
+        names.sort(key=lambda n: (arena.regions[n].meta, arena.regions[n].offset))
+        flushed_any = False
+        for name in names:
+            region = arena.regions[name]
+            if region.meta and not include_meta:
+                continue
+            marks = self._pending.pop(name)
+            rows = np.unique(np.concatenate([r for r, _ in marks]))
+            would_lines = sum(w for _, w in marks)
+            marked_rows = sum(r.size for r, _ in marks)
+            self._copy_rows(region, rows)
+            before = arena.stats.lines
+            arena._account_rows(region.offset, region.rowbytes, rows)
+            actual = arena.stats.lines - before
+            arena.stats.saved_lines += max(0, would_lines - actual)
+            arena.stats.dedup_rows += marked_rows - rows.size
+            flushed_any = True
+        if not include_meta:
+            self._pending.clear()   # crash point: metadata marks are lost
+        if flushed_any:
+            arena.stats.epochs += 1
+
+    def _copy_rows(self, region, rows: np.ndarray) -> None:
+        pv = region._pview()
+        if (self.arena.pack_flush_rows
+                and rows.size >= self.arena.pack_flush_rows):
+            pv[rows] = _pack_gather(region.vol, rows)
+        else:
+            pv[rows] = region.vol[rows]
+
+
+def _pack_gather(vol: np.ndarray, rows: np.ndarray) -> np.ndarray:
+    """Gather dirty rows through the Pallas pack kernel (tile-aligned
+    staging buffer — the §V-E flush-unit path).  Rows are bit-cast to
+    uint32 words so 64-bit payloads survive jax's default 32-bit mode.
+    Falls back to a numpy gather if the kernel stack is unavailable."""
+    try:
+        import jax.numpy as jnp
+        from repro.kernels import ops as kops
+    except Exception:                                 # pragma: no cover
+        return vol[rows]
+    words = vol.reshape(vol.shape[0], -1).view(np.uint32)
+    packed = kops.pack_rows(jnp.asarray(words), jnp.asarray(rows, jnp.int32))
+    return np.ascontiguousarray(np.asarray(packed)).view(vol.dtype).reshape(
+        (rows.size,) + vol.shape[1:])
+
+
+class DigestWriteSet:
+    """Content-digest dirty tracking for file-per-leaf persistence.
+
+    ``dirty(key, digest, present)`` returns True when the leaf must be
+    rewritten (digest changed, or the backing file is missing) and
+    records the new digest; unchanged leaves are counted as deduplicated
+    writes, mirroring ``WriteSet``'s row dedup at file granularity."""
+
+    def __init__(self):
+        self._digests: Dict[str, str] = {}
+        self.skipped = 0
+        self.written = 0
+
+    def dirty(self, key: str, digest: str, present: bool = True) -> bool:
+        clean = present and self._digests.get(key) == digest
+        self._digests[key] = digest
+        if clean:
+            self.skipped += 1
+            return False
+        self.written += 1
+        return True
+
+    def note(self, key: str, digest: str) -> None:
+        """Record a write that happens regardless of digest (callers not
+        running in incremental mode), keeping the counters truthful."""
+        self._digests[key] = digest
+        self.written += 1

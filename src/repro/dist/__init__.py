@@ -1,0 +1,8 @@
+"""Distribution layer: mesh construction + sharding policy.
+
+``repro.dist.mesh`` owns every sharding decision the framework makes —
+parameter/batch/cache PartitionSpecs, FSDP policy, activation and
+sequence-parallel constraints — so models and launch code never spell
+axis names locally (DESIGN.md §5).
+"""
+from repro.dist import mesh  # noqa: F401

@@ -1,0 +1,244 @@
+"""Sharding policy for the production mesh (DESIGN.md §5).
+
+One module owns every axis-name decision:
+
+* mesh construction (re-exported from the original ``launch/mesh.py``
+  helpers, kept importable from both paths);
+* parameter PartitionSpecs (model parallel + optional FSDP/ZeRO-3);
+* batch / KV-cache PartitionSpecs for the dry-run cells;
+* module-level *hooks* — activation sharding and sequence-parallel
+  constraints — set per-cell by ``launch/specs.build_cell`` and consumed
+  inside the traced model code via ``with_sharding_constraint``.
+
+The production mesh is (data=16, model=16), optionally with a leading
+pod=2 axis (512 chips).  PartitionSpec choices are made by divisibility
+against those axis sizes, so every emitted spec shards evenly; dims that
+do not divide stay replicated rather than erroring.
+
+All hooks are no-ops until set, so single-device smoke tests trace the
+exact same model code with zero constraints.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple, Union
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.launch.mesh import (  # noqa: F401  (re-exported)
+    MULTI_POD,
+    POD_SIZE,
+    SINGLE_POD,
+    make_host_mesh,
+    make_production_mesh,
+)
+
+PyTree = Any
+Axes = Union[str, Tuple[str, ...]]
+
+# Production axis sizes (v5e pod slice).  param_pspecs has no mesh in
+# hand — divisibility is decided against these constants, which match
+# both assigned meshes (the pod axis only ever appears in FSDP axes).
+AXIS_SIZE: Dict[str, int] = {"data": 16, "model": 16, "pod": 2}
+MODEL_AXIS = "model"
+
+# Archs above this parameter count get ZeRO-3 (FSDP) sharding of the f32
+# master params + moments by default; below it, replicated masters keep
+# the param all-gathers off the critical path.
+FSDP_THRESHOLD = 5_000_000_000
+
+
+def _axes_tuple(axes: Axes) -> Tuple[str, ...]:
+    return axes if isinstance(axes, tuple) else (axes,)
+
+
+def _axes_size(axes: Axes) -> int:
+    n = 1
+    for a in _axes_tuple(axes):
+        n *= AXIS_SIZE[a]
+    return n
+
+
+# ---------------------------------------------------------------------------
+# FSDP policy
+# ---------------------------------------------------------------------------
+
+_FSDP: Dict[str, Axes] = {"axes": "data"}
+
+
+def use_fsdp(cfg) -> bool:
+    """ZeRO-3 by parameter count (>5B ⇒ shard masters/moments)."""
+    return cfg.param_count() > FSDP_THRESHOLD
+
+
+def set_fsdp_axes(axes: Axes) -> None:
+    """Axes the FSDP dim shards over ("data" or ("pod", "data"))."""
+    _FSDP["axes"] = axes
+
+
+def fsdp_axes() -> Axes:
+    return _FSDP["axes"]
+
+
+# ---------------------------------------------------------------------------
+# Data-parallel helpers
+# ---------------------------------------------------------------------------
+
+
+def dp_axes(mesh) -> Axes:
+    """The batch-sharding axes of a mesh (pod folds into data-parallel)."""
+    return ("pod", "data") if "pod" in mesh.axis_names else "data"
+
+
+def _dp_divides(mesh, batch: int) -> bool:
+    sizes = dict(mesh.shape)
+    n = 1
+    for a in _axes_tuple(dp_axes(mesh)):
+        n *= sizes[a]
+    return batch % n == 0
+
+
+def scalar_sharding(mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())
+
+
+def to_shardings(mesh, tree: PyTree) -> PyTree:
+    """PartitionSpec tree -> NamedSharding tree on the given mesh."""
+    return jax.tree.map(lambda p: NamedSharding(mesh, p), tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def attn_head_shardable(cfg) -> bool:
+    """Can attention KV heads shard the 16-way model axis?  When not,
+    build_cell falls back to sequence-parallel attention."""
+    return cfg.n_kv_heads % AXIS_SIZE[MODEL_AXIS] == 0
+
+
+# ---------------------------------------------------------------------------
+# Parameter PartitionSpecs
+# ---------------------------------------------------------------------------
+
+
+def _leaf_pspec(shape: Tuple[int, ...], stacked: bool, fsdp: bool) -> P:
+    """Model-parallel one dim (last divisible, i.e. the fan-out/feature
+    dim), FSDP another (first divisible, i.e. the fan-in dim).  The
+    leading superblock-stack dim of scanned leaves is never sharded."""
+    rank = len(shape)
+    entries: list = [None] * rank
+    off = 1 if stacked else 0
+    mdim = None
+    for i in reversed(range(off, rank)):
+        if shape[i] and shape[i] % AXIS_SIZE[MODEL_AXIS] == 0:
+            mdim = i
+            entries[i] = MODEL_AXIS
+            break
+    if fsdp:
+        fx = _FSDP["axes"]
+        fsize = _axes_size(fx)
+        for i in range(off, rank):
+            if i != mdim and shape[i] and shape[i] % fsize == 0:
+                entries[i] = fx
+                break
+    return P(*entries)
+
+
+def param_pspecs(cfg, fsdp: bool) -> PyTree:
+    """PartitionSpec tree congruent with ``backbone.param_specs(cfg)``."""
+    from repro.models import backbone as B
+
+    specs = B.param_specs(cfg)
+
+    def leaf(path, s):
+        keys = [getattr(k, "key", getattr(k, "name", "")) for k in path]
+        stacked = bool(keys) and keys[0] in ("blocks", "enc_blocks")
+        return _leaf_pspec(tuple(s.shape), stacked, fsdp)
+
+    return jax.tree_util.tree_map_with_path(leaf, specs)
+
+
+# ---------------------------------------------------------------------------
+# Batch / cache PartitionSpecs
+# ---------------------------------------------------------------------------
+
+
+def batch_pspecs(cfg, mesh, batch: int) -> Dict[str, P]:
+    """Specs for the data batch (superset of keys; callers filter)."""
+    bdim = dp_axes(mesh) if _dp_divides(mesh, batch) else None
+    out = {"tokens": P(bdim, None), "labels": P(bdim, None)}
+    if cfg.family == "audio":
+        out["frames"] = P(bdim, None, None)
+    if cfg.family == "vlm":
+        out["context"] = P(bdim, None, None)
+    return out
+
+
+def cache_pspecs(cfg, mesh, batch: int) -> PyTree:
+    """Specs congruent with ``backbone.cache_specs``: batch over the DP
+    axes, KV-heads/head_dim over model; the seq/capacity dim (dynamic
+    ring-writes) and the scanned superblock dim stay unsharded."""
+    from repro.models import backbone as B
+
+    specs = B.cache_specs(cfg, batch, 64)  # structure only; seq not sharded
+    bdim = dp_axes(mesh) if _dp_divides(mesh, batch) else None
+
+    def leaf(path, s):
+        keys = [getattr(k, "key", getattr(k, "name", "")) for k in path]
+        stacked = bool(keys) and keys[0] == "blocks"
+        shape = tuple(s.shape)
+        rank = len(shape)
+        off = 1 if stacked else 0  # off = batch dim index
+        entries: list = [None] * rank
+        if rank > off:
+            entries[off] = bdim
+        # model axis on the trailing head/feature dim (skip the seq dim
+        # right after batch when another dim divides first).
+        for i in reversed(range(off + 1, rank)):
+            if shape[i] and shape[i] % AXIS_SIZE[MODEL_AXIS] == 0:
+                entries[i] = MODEL_AXIS
+                break
+        return P(*entries)
+
+    return jax.tree_util.tree_map_with_path(leaf, specs)
+
+
+# ---------------------------------------------------------------------------
+# Traced-model hooks (set per cell, consumed under jit)
+# ---------------------------------------------------------------------------
+
+_ACT: Dict[str, Optional[NamedSharding]] = {"sharding": None}
+_SEQ: Dict[str, Optional[NamedSharding]] = {"q": None, "kv": None,
+                                            "res": None}
+
+
+def set_activation_sharding(sharding: Optional[NamedSharding]) -> None:
+    _ACT["sharding"] = sharding
+
+
+def constrain_activations(x: jax.Array) -> jax.Array:
+    """Re-anchor batch-parallel (B, S, d) activations (embed output and
+    residual stream); no-op when unset or rank-mismatched (decode's
+    (B, 1, d) still matches — a None spec entry is fine at size 1)."""
+    sh = _ACT["sharding"]
+    if sh is None or len(sh.spec) != x.ndim:
+        return x
+    return jax.lax.with_sharding_constraint(x, sh)
+
+
+def set_seq_parallel(q: Optional[NamedSharding],
+                     kv: Optional[NamedSharding],
+                     res: Optional[NamedSharding]) -> None:
+    """Sequence-parallel attention for archs whose KV heads can't shard
+    the model axis: Q stays sequence-sharded, K/V all-gather, the
+    attention output re-anchors to the residual sharding."""
+    _SEQ["q"], _SEQ["kv"], _SEQ["res"] = q, kv, res
+
+
+def seq_parallel_on() -> bool:
+    return _SEQ["q"] is not None
+
+
+def seq_parallel(x: jax.Array, which: str) -> jax.Array:
+    sh = _SEQ[which]
+    if sh is None or len(sh.spec) != x.ndim:
+        return x
+    return jax.lax.with_sharding_constraint(x, sh)

@@ -113,7 +113,9 @@ class BPTree:
         return np.asarray(ids, np.int64)
 
     # ---------------- flush policy ----------------
-    def _flush_nodes(self, dirty: np.ndarray) -> None:
+    def _mark_nodes(self, dirty: np.ndarray) -> None:
+        """Mark dirty node rows into the arena write set.  Partly mode
+        persists only leaf rows — inner nodes are volatile redundancy."""
         dirty = np.unique(np.asarray(dirty, np.int64))
         if dirty.size == 0:
             return
@@ -122,7 +124,7 @@ class BPTree:
             dirty = dirty[leaf]
             if dirty.size == 0:
                 return
-        self.nodes.persist_rows(dirty)
+        self.nodes.mark_rows(dirty)
 
     # ---------------- search ----------------
     def _descend(self, keys: np.ndarray) -> np.ndarray:
@@ -169,6 +171,10 @@ class BPTree:
 
     # ---------------- insert ----------------
     def insert_batch(self, keys: np.ndarray, values: np.ndarray) -> None:
+        with self.arena.epoch():
+            self._insert_batch(keys, values)
+
+    def _insert_batch(self, keys: np.ndarray, values: np.ndarray) -> None:
         keys = np.asarray(keys, np.int64)
         values = np.asarray(values, np.int64)
         # de-dup batch (keep last)
@@ -176,8 +182,6 @@ class BPTree:
         keep = np.sort(len(keys) - 1 - last)
         keys, values = keys[keep], values[keep]
         hv = self.header.vol[0]
-        dirty_nodes: List[int] = []
-        dirty_recs: List[np.ndarray] = []
 
         if hv[H_FLAG] == 0 or hv[H_ROOT] == NULL:
             root = int(self._alloc_nodes(1)[0])
@@ -202,19 +206,13 @@ class BPTree:
         # parent insertions accumulated per level
         promo: List[Tuple[int, int, int]] = []  # (left_node, sep_key, right_node)
         for leaf, ks, vs in pending:
-            promo.extend(self._leaf_merge(leaf, ks, vs, dirty_nodes,
-                                          dirty_recs))
+            promo.extend(self._leaf_merge(leaf, ks, vs))
         # propagate splits upward
         while promo:
-            promo = self._parent_insert(promo, dirty_nodes)
+            promo = self._parent_insert(promo)
+        self.header.mark_rows(np.array([0]))
 
-        self._flush_nodes(np.asarray(dirty_nodes, np.int64))
-        if dirty_recs:
-            self.records.persist_rows(np.concatenate(dirty_recs))
-        self.header.persist_rows(np.array([0]))
-
-    def _leaf_merge(self, leaf: int, ks: np.ndarray, vs: np.ndarray,
-                    dirty_nodes: List[int], dirty_recs: List[np.ndarray]):
+    def _leaf_merge(self, leaf: int, ks: np.ndarray, vs: np.ndarray):
         hv = self.header.vol[0]
         row = self.nodes.vol[leaf]
         nk = int(row[C_NK])
@@ -227,14 +225,14 @@ class BPTree:
             pos = np.searchsorted(old_k, ks[dup])
             recs = old_p[pos].astype(np.int64)
             self.records.vol[recs, :VALUE_WORDS] = vs[dup]
-            dirty_recs.append(recs)
+            self.records.mark_rows(recs)
         new_mask = ~dup
         if not new_mask.any():
             return []
         nks, nvs = ks[new_mask], vs[new_mask]
         recs = self._alloc_recs(len(nks))
         self.records.vol[recs, :VALUE_WORDS] = nvs
-        dirty_recs.append(recs)
+        self.records.mark_rows(recs)
         merged_k = np.concatenate([old_k, nks])
         merged_p = np.concatenate([old_p.astype(np.int64), recs])
         so = np.argsort(merged_k, kind="stable")
@@ -242,7 +240,7 @@ class BPTree:
         hv[H_COUNT] += len(nks)
         if len(merged_k) <= MAX_KEYS:
             self._write_leaf(leaf, merged_k, merged_p)
-            dirty_nodes.append(leaf)
+            self._mark_nodes(np.array([leaf]))
             return []
         # split into chunks of SPLIT_FILL (last chunk takes remainder <= MAX)
         n = len(merged_k)
@@ -270,7 +268,7 @@ class BPTree:
         parent = int(row[C_PARENT])
         for nid in new_ids:
             self.nodes.vol[nid, C_PARENT] = parent
-        dirty_nodes.extend(chain)
+        self._mark_nodes(np.asarray(chain, np.int64))
         return promos
 
     def _write_leaf(self, nid: int, ks: np.ndarray, ps: np.ndarray) -> None:
@@ -281,11 +279,11 @@ class BPTree:
         row[P0:P1] = 0
         row[P0:P0 + len(ks)] = ps.astype(np.int32)
 
-    def _parent_insert(self, promo: List[Tuple[int, int, int]],
-                       dirty_nodes: List[int]):
+    def _parent_insert(self, promo: List[Tuple[int, int, int]]):
         """Insert (sep, right) pairs after `left` in their parents.  Returns
         next level's promotions."""
         hv = self.header.vol[0]
+        dirty: List[int] = []
         by_parent: Dict[int, List[Tuple[int, int, int]]] = {}
         for left, sep, right in promo:
             parent = int(self.nodes.vol[left, C_PARENT])
@@ -300,14 +298,14 @@ class BPTree:
                 r[P0] = left
                 self.nodes.vol[left, C_PARENT] = new_root
                 hv[H_ROOT] = new_root
-                dirty_nodes.append(new_root)
+                dirty.append(new_root)
                 parent = new_root
             # Set the right child's parent EAGERLY so later promotions in
             # this same pass (whose `left` is this `right`) resolve to the
             # correct parent.
             self.nodes.vol[right, C_PARENT] = parent
             if self.mode == "full":
-                dirty_nodes.append(right)  # parent field is persistent
+                dirty.append(right)  # parent field is persistent
             by_parent.setdefault(parent, []).append((left, sep, right))
         next_promo: List[Tuple[int, int, int]] = []
         for parent, items in by_parent.items():
@@ -321,7 +319,7 @@ class BPTree:
                 ptrs.insert(at, right)
             if len(keysv) <= MAX_KEYS:
                 self._write_inner(parent, keysv, ptrs)
-                dirty_nodes.append(parent)
+                dirty.append(parent)
                 continue
             # split inner node into chunks of <= MAX_KEYS keys
             all_k, all_p = keysv, ptrs
@@ -346,13 +344,14 @@ class BPTree:
                 for c in cp:
                     self.nodes.vol[c, C_PARENT] = nid
                 if self.mode == "full":
-                    dirty_nodes.extend(int(c) for c in cp)
-                dirty_nodes.append(nid)
+                    dirty.extend(int(c) for c in cp)
+                dirty.append(nid)
             gp = int(self.nodes.vol[parent, C_PARENT])
             for nid in new_ids:
                 self.nodes.vol[nid, C_PARENT] = gp
             for li, sep in enumerate(seps):
                 next_promo.append((node_ids[li], sep, node_ids[li + 1]))
+        self._mark_nodes(np.asarray(dirty, np.int64))
         return next_promo
 
     def _write_inner(self, nid: int, ks, ps) -> None:
@@ -366,13 +365,16 @@ class BPTree:
 
     # ---------------- delete ----------------
     def delete_batch(self, keys: np.ndarray) -> np.ndarray:
+        with self.arena.epoch():
+            return self._delete_batch(keys)
+
+    def _delete_batch(self, keys: np.ndarray) -> np.ndarray:
         keys = np.asarray(keys, np.int64)
         hv = self.header.vol[0]
         if hv[H_FLAG] == 0 or hv[H_ROOT] == NULL:
             return np.zeros(len(keys), bool)
         leaves = self._descend(keys)
         ok = np.zeros(len(keys), bool)
-        dirty: List[int] = []
         order = np.argsort(leaves, kind="stable")
         i = 0
         while i < len(order):
@@ -394,29 +396,28 @@ class BPTree:
             keep_k, keep_p = old_k[~hit], old_p[~hit]
             hv[H_COUNT] -= int(hit.sum())
             self._write_leaf(leaf, keep_k, keep_p)
-            dirty.append(leaf)
+            self._mark_nodes(np.array([leaf]))
             if len(keep_k) == 0:
-                self._unlink_leaf(leaf, dirty)
-        self._flush_nodes(np.asarray(dirty, np.int64))
-        self.header.persist_rows(np.array([0]))
+                self._unlink_leaf(leaf)
+        self.header.mark_rows(np.array([0]))
         return ok
 
-    def _unlink_leaf(self, leaf: int, dirty: List[int]) -> None:
+    def _unlink_leaf(self, leaf: int) -> None:
         hv = self.header.vol[0]
         nxt = int(self.nodes.vol[leaf, C_NEXT])
         prv = int(self.leaf_prev[leaf])
         if prv != NULL:
             self.nodes.vol[prv, C_NEXT] = nxt
-            dirty.append(prv)
+            self._mark_nodes(np.array([prv]))
         else:
             hv[H_FIRST_LEAF] = nxt
         if nxt != NULL:
             self.leaf_prev[nxt] = prv
         # detach from parent (recursively removing emptied inner nodes)
-        self._remove_child(int(self.nodes.vol[leaf, C_PARENT]), leaf, dirty)
+        self._remove_child(int(self.nodes.vol[leaf, C_PARENT]), leaf)
         self._free_nodes.append(leaf)
 
-    def _remove_child(self, parent: int, child: int, dirty: List[int]) -> None:
+    def _remove_child(self, parent: int, child: int) -> None:
         hv = self.header.vol[0]
         if parent == NULL:
             if int(hv[H_ROOT]) == child:
@@ -433,11 +434,11 @@ class BPTree:
             if nk:
                 del keysv[max(0, at - 1)]
             if not ptrs:
-                self._remove_child(int(row[C_PARENT]), parent, dirty)
+                self._remove_child(int(row[C_PARENT]), parent)
                 self._free_nodes.append(parent)
                 return
             self._write_inner(parent, keysv, ptrs)
-            dirty.append(parent)
+            self._mark_nodes(np.array([parent]))
 
     # ---------------- crash / reconstruction ----------------
     def reconstruct(self) -> None:

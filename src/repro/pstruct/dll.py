@@ -106,6 +106,10 @@ class DoublyLinkedList:
     # ------------- operations -------------
     def append_batch(self, values: np.ndarray) -> np.ndarray:
         """Append m nodes at the tail.  values: (m, 7) int64.  Returns ids."""
+        with self.arena.epoch():
+            return self._append_batch(values)
+
+    def _append_batch(self, values: np.ndarray) -> np.ndarray:
         m = len(values)
         ids = self._alloc(m)
         hv = self.header.vol[0]
@@ -133,14 +137,18 @@ class DoublyLinkedList:
             self._compact_ring()
         self._ring[self._r1:self._r1 + n] = ids
         self._r1 += n
-        # ---- flush (the persistence cost) ----
+        # ---- mark dirty (flushed once at epoch close) ----
         dirty = ids if old_tail == NULL else np.concatenate([[old_tail], ids])
-        self.nodes.persist_rows(dirty)
-        self.header.persist_rows(np.array([0]))
+        self.nodes.mark_rows(dirty)
+        self.header.mark_rows(np.array([0]))
         return ids
 
     def pop_front_batch(self, m: int) -> np.ndarray:
         """Remove the m oldest nodes (LRU eviction).  Returns their ids."""
+        with self.arena.epoch():
+            return self._pop_front_batch(m)
+
+    def _pop_front_batch(self, m: int) -> np.ndarray:
         hv = self.header.vol[0]
         m = min(m, int(hv[H_COUNT]))
         if m == 0:
@@ -160,14 +168,19 @@ class DoublyLinkedList:
             # fully persistent must clear new_head's prev line
             if new_head != NULL:
                 self.nodes.vol[new_head, DATA_WORDS + 1] = NULL
-                self.nodes.persist_rows(np.array([new_head]))
-        self.header.persist_rows(np.array([0]))
+                self.nodes.mark_rows(np.array([new_head]))
+        self.header.mark_rows(np.array([0]))
         return ids
 
     def delete_batch(self, ids: np.ndarray) -> None:
         """Unlink an arbitrary batch of node ids (vectorized rounds: each
-        round unlinks ids whose predecessor is not itself being deleted)."""
-        ids = np.asarray(ids, np.int64)
+        round unlinks ids whose predecessor is not itself being deleted).
+        All rounds share one epoch: a predecessor rewritten in several
+        rounds flushes once."""
+        with self.arena.epoch():
+            self._delete_batch(np.asarray(ids, np.int64))
+
+    def _delete_batch(self, ids: np.ndarray) -> None:
         pending = set(ids.tolist())
         hv = self.header.vol[0]
         while pending:
@@ -197,8 +210,8 @@ class DoublyLinkedList:
             self._free.extend(batch.tolist())
             pending.difference_update(batch.tolist())
             if dirty:
-                self.nodes.persist_rows(np.asarray(dirty, np.int64))
-            self.header.persist_rows(np.array([0]))
+                self.nodes.mark_rows(np.asarray(dirty, np.int64))
+        self.header.mark_rows(np.array([0]))
         self._ring_invalidate(ids)
 
     # ------------- ring helpers -------------

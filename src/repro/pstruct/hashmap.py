@@ -88,7 +88,7 @@ class Hashmap:
     def _persist_buckets(self, bkts: np.ndarray) -> None:
         if self._pbuckets is not None and bkts.size:
             self._pbuckets.vol[bkts, 0] = self.buckets[bkts]
-            self._pbuckets.persist_rows(bkts)
+            self._pbuckets.mark_rows(bkts)
 
     # -------- views --------
     @property
@@ -132,6 +132,10 @@ class Hashmap:
     # -------- mutation --------
     def insert_batch(self, keys: np.ndarray, values: np.ndarray) -> None:
         """Insert-or-update.  keys: (m,); values: (m, 7)."""
+        with self.arena.epoch():
+            self._insert_batch(keys, values)
+
+    def _insert_batch(self, keys: np.ndarray, values: np.ndarray) -> None:
         keys = np.asarray(keys, np.int64)
         values = np.asarray(values, np.int64)
         # de-dup within batch: keep the last occurrence
@@ -141,11 +145,10 @@ class Hashmap:
         slots = self._find_slots(keys)
         upd = slots != NULL
         hv = self.header.vol[0]
-        dirty = []
         if upd.any():
             s = slots[upd]
             self.entries.vol[s, 1:1 + VALUE_WORDS] = values[upd]
-            dirty.append(s)
+            self.entries.mark_rows(s)
         new_keys = keys[~upd]
         if len(new_keys):
             fresh0 = int(hv[H_FRESH])
@@ -162,13 +165,11 @@ class Hashmap:
             if self.mode == "full":
                 self.entries.vol[ids, 8] = h.astype(np.int64) >> np.int64(1)
                 # chain pointers persisted too (set in _link)
-            dirty.append(ids)
+            self.entries.mark_rows(ids)
             if hv[H_SIZE] > self.load_factor * self.n_buckets:
                 self._grow()
         hv[H_FLAG] = 1
-        if dirty:
-            self.entries.persist_rows(np.concatenate(dirty))
-        self.header.persist_rows(np.array([0]))
+        self.header.mark_rows(np.array([0]))
 
     def _link(self, ids: np.ndarray, h: np.ndarray) -> None:
         """Append ids to their bucket chains (chain-tail order, as the
@@ -196,7 +197,7 @@ class Hashmap:
             link_dirty = tails[tails != NULL]
             if link_dirty.size:
                 self.entries.vol[link_dirty, 9] = self.chain[link_dirty]
-                self.entries.persist_rows(link_dirty)
+                self.entries.mark_rows(link_dirty)
             self._persist_buckets(np.asarray(new_bucket_heads, np.int64))
 
     def _chain_tails(self, bkts: np.ndarray) -> np.ndarray:
@@ -212,24 +213,26 @@ class Hashmap:
 
     def remove_batch(self, keys: np.ndarray) -> np.ndarray:
         """Tombstone deletion.  Returns mask of keys that were present."""
+        with self.arena.epoch():
+            return self._remove_batch(keys)
+
+    def _remove_batch(self, keys: np.ndarray) -> np.ndarray:
         keys = np.asarray(keys, np.int64)
         slots = self._find_slots(keys)
         ok = slots != NULL
         s = np.unique(slots[ok])
         if s.size == 0:
-            self.header.persist_rows(np.array([0]))
+            self.header.mark_rows(np.array([0]))
             return ok
         hv = self.header.vol[0]
         # unlink from volatile chains (vectorized per chain via predecessor
-        # search), write tombstone key persistently.
+        # search), write tombstone key persistently; chain fixes in full
+        # mode are marked inside _unlink.
         self._unlink(s)
         self.entries.vol[s, 0] = KEY_NULL
         hv[H_SIZE] -= s.size
-        dirty = [s]
-        if self.mode == "full":
-            pass  # chain fixes were persisted inside _unlink
-        self.entries.persist_rows(np.concatenate(dirty))
-        self.header.persist_rows(np.array([0]))
+        self.entries.mark_rows(s)
+        self.header.mark_rows(np.array([0]))
         return ok
 
     def _unlink(self, slots: np.ndarray) -> None:
@@ -258,7 +261,7 @@ class Hashmap:
                 cur = nxt
         if self.mode == "full":
             if dirty:
-                self.entries.persist_rows(np.asarray(dirty, np.int64))
+                self.entries.mark_rows(np.asarray(dirty, np.int64))
             self._persist_buckets(np.asarray(head_dirty, np.int64))
 
     def _grow(self) -> None:
@@ -273,10 +276,10 @@ class Hashmap:
             fresh = int(self.header.vol[0, H_FRESH])
             live = np.nonzero(self.keys[:fresh] != KEY_NULL)[0]
             self.entries.vol[live, 9] = self.chain[live]
-            self.entries.persist_rows(live)
+            self.entries.mark_rows(live)
             self._pbuckets.vol[: self.n_buckets, 0] = \
                 self.buckets[: self.n_buckets]
-            self._pbuckets.persist_range(0, self.n_buckets)
+            self._pbuckets.mark_range(0, self.n_buckets)
 
     def _rebuild_chains(self) -> None:
         fresh = int(self.header.vol[0, H_FRESH])

@@ -532,6 +532,8 @@ def analyze(compiled, *, n_devices: int, pod_size: int = 1 << 30,
     ca = {}
     try:
         ca = compiled.cost_analysis() or {}
+        if isinstance(ca, (list, tuple)):   # older jax: one dict per device
+            ca = ca[0] if ca else {}
     except Exception:
         pass
     return Roofline(

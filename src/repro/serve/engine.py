@@ -74,14 +74,15 @@ class ServingEngine:
     def add_request(self, rid: int, prompt: np.ndarray) -> int:
         slot = self._free_slot()
         plen = len(prompt)
-        # ESSENTIAL: token log row + request-table entry
-        self.tok_region.vol[slot, :plen] = prompt
-        self.tok_region.persist_range(slot, slot + 1)
-        val = np.zeros((1, 7), np.int64)
-        val[0, :4] = [slot, plen, plen, 1]
-        self.table.insert_batch(np.array([rid], np.int64), val)
-        self.paging.alloc(rid, -(-plen // self.cfg.page_tokens))
-        self.arena.commit()
+        # ESSENTIAL: token log row + request-table entry, one epoch
+        with self.arena.epoch():
+            self.tok_region.vol[slot, :plen] = prompt
+            self.tok_region.mark_range(slot, slot + 1)
+            val = np.zeros((1, 7), np.int64)
+            val[0, :4] = [slot, plen, plen, 1]
+            self.table.insert_batch(np.array([rid], np.int64), val)
+            self.paging.alloc(rid, -(-plen // self.cfg.page_tokens))
+            self.arena.commit()
         # DERIVABLE: device prefill into the slot
         self._prefill_slot(slot, prompt)
         self.slot_rid[slot] = rid
@@ -108,29 +109,34 @@ class ServingEngine:
     def step(self) -> Dict[int, int]:
         """One greedy decode step for every active slot.  Returns
         {rid: token}.  Per-slot positions differ, so slots run their own
-        decode_step (jit'd once; static shapes)."""
+        decode_step (jit'd once; static shapes).
+
+        The whole step is one persistence epoch: every slot's token-log
+        row and table entry flush once at the closing commit, not once
+        per slot."""
         out: Dict[int, int] = {}
-        for slot in range(self.cfg.max_batch):
-            rid = int(self.slot_rid[slot])
-            if rid < 0:
-                continue
-            p = int(self.pos[slot])
-            if p >= self.cfg.s_max:
-                continue
-            last_tok = int(self.tok_region.vol[slot, p - 1])
-            logits, self.cache = self._decode_slot(slot, last_tok, p)
-            tok = int(np.asarray(jnp.argmax(logits)))
-            # ESSENTIAL: append the generated token + bump lengths
-            self.tok_region.vol[slot, p] = tok
-            self.tok_region.persist_range(slot, slot + 1)
-            val = np.zeros((1, 7), np.int64)
-            val[0, :4] = [slot, 0, 0, 1]
-            ok, cur = self.table.find_batch(np.array([rid], np.int64))
-            cur[0, V_TLEN] += 1
-            self.table.insert_batch(np.array([rid], np.int64), cur)
-            self.pos[slot] = p + 1
-            out[rid] = tok
-        self.arena.commit()
+        with self.arena.epoch():
+            for slot in range(self.cfg.max_batch):
+                rid = int(self.slot_rid[slot])
+                if rid < 0:
+                    continue
+                p = int(self.pos[slot])
+                if p >= self.cfg.s_max:
+                    continue
+                last_tok = int(self.tok_region.vol[slot, p - 1])
+                logits, self.cache = self._decode_slot(slot, last_tok, p)
+                tok = int(np.asarray(jnp.argmax(logits)))
+                # ESSENTIAL: append the generated token + bump lengths
+                self.tok_region.vol[slot, p] = tok
+                self.tok_region.mark_range(slot, slot + 1)
+                val = np.zeros((1, 7), np.int64)
+                val[0, :4] = [slot, 0, 0, 1]
+                ok, cur = self.table.find_batch(np.array([rid], np.int64))
+                cur[0, V_TLEN] += 1
+                self.table.insert_batch(np.array([rid], np.int64), cur)
+                self.pos[slot] = p + 1
+                out[rid] = tok
+            self.arena.commit()
         return out
 
     def _decode_slot(self, slot: int, token: int, p: int):

@@ -44,19 +44,24 @@ class PagedAllocator:
         self.owner: np.ndarray = np.full(cfg.n_pages, -1, np.int64)
 
     def alloc(self, request_id: int, n: int) -> np.ndarray:
-        """Allocate n pages to a request (LRU-evicting if exhausted)."""
-        if len(self.pages_free) < n:
-            self._evict(n - len(self.pages_free))
-        pages = np.asarray([self.pages_free.pop() for _ in range(n)],
-                           np.int64)
-        vals = np.zeros((n, 7), np.int64)
-        vals[:, 0] = pages
-        vals[:, 1] = request_id
-        ids = self.lru.append_batch(vals)
-        for nd, pg in zip(ids.tolist(), pages.tolist()):
-            self.page_of_node[nd] = pg
-        self.owner[pages] = request_id
-        self.arena.commit()
+        """Allocate n pages to a request (LRU-evicting if exhausted).
+
+        Eviction, append, and commit share one epoch: LRU rows touched by
+        both the pop and the append flush once, and the header row —
+        previously flushed by each sub-op — flushes once per alloc."""
+        with self.arena.epoch():
+            if len(self.pages_free) < n:
+                self._evict(n - len(self.pages_free))
+            pages = np.asarray([self.pages_free.pop() for _ in range(n)],
+                               np.int64)
+            vals = np.zeros((n, 7), np.int64)
+            vals[:, 0] = pages
+            vals[:, 1] = request_id
+            ids = self.lru.append_batch(vals)
+            for nd, pg in zip(ids.tolist(), pages.tolist()):
+                self.page_of_node[nd] = pg
+            self.owner[pages] = request_id
+            self.arena.commit()
         return pages
 
     def free_request(self, request_id: int) -> None:
@@ -66,12 +71,13 @@ class PagedAllocator:
         # find their DLL nodes
         nodes = [nd for nd, pg in self.page_of_node.items()
                  if self.owner[pg] == request_id]
-        self.lru.delete_batch(np.asarray(nodes, np.int64))
-        for nd in nodes:
-            self.page_of_node.pop(nd, None)
-        self.owner[pages] = -1
-        self.pages_free.extend(pages.tolist())
-        self.arena.commit()
+        with self.arena.epoch():
+            self.lru.delete_batch(np.asarray(nodes, np.int64))
+            for nd in nodes:
+                self.page_of_node.pop(nd, None)
+            self.owner[pages] = -1
+            self.pages_free.extend(pages.tolist())
+            self.arena.commit()
 
     def _evict(self, n: int) -> np.ndarray:
         nodes = self.lru.pop_front_batch(n)

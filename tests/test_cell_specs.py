@@ -40,7 +40,12 @@ def make_abstract_mesh(multi_pod: bool):
     try:
         return AbstractMesh(shape, axes)
     except TypeError:
+        pass
+    try:
         return AbstractMesh(axis_sizes=shape, axis_names=axes)
+    except TypeError:
+        # older signature: one tuple of (name, size) pairs
+        return AbstractMesh(tuple(zip(axes, shape)))
 
 
 def _axis_prod(mesh, spec_entry):

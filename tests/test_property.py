@@ -7,8 +7,11 @@ point.  The system invariant under test is the paper's central claim:
 and flush accounting: lines(partly) <= lines(full) for the same op trace.
 """
 import numpy as np
-from hypothesis import HealthCheck, given, settings
-from hypothesis import strategies as st
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import HealthCheck, given, settings  # noqa: E402
+from hypothesis import strategies as st  # noqa: E402
 
 from repro.core.arena import open_arena
 from repro.pstruct.bptree import BPTree

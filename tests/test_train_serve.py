@@ -78,15 +78,26 @@ def test_pipeline_determinism_and_cursor():
 
 
 def test_serving_crash_recover_determinism(tmp_path, small_model):
+    """Tokens generated after crash+recover must equal the same steps of
+    an uninterrupted twin run (greedy decode is deterministic)."""
     params = small_model.init_params(jax.random.PRNGKey(0))
     ec = EngineConfig(max_batch=2, s_max=24, max_requests=16)
-    eng = ServingEngine(small_model, params, ec,
-                        arena_path=str(tmp_path / "arena"))
-    eng.add_request(101, np.array([1, 2, 3, 4], np.int64))
-    eng.add_request(202, np.array([9, 8, 7], np.int64))
-    for _ in range(3):
+
+    def fresh(name):
+        eng = ServingEngine(small_model, params, ec,
+                            arena_path=str(tmp_path / name))
+        eng.add_request(101, np.array([1, 2, 3, 4], np.int64))
+        eng.add_request(202, np.array([9, 8, 7], np.int64))
+        return eng
+
+    twin = fresh("twin")
+    for _ in range(6):
+        twin.step()
+    ref = [twin.step() for _ in range(3)]
+
+    eng = fresh("arena")
+    for _ in range(6):
         eng.step()
-    ref = [eng.step() for _ in range(3)]
     eng.crash()
     dt = eng.recover()
     assert dt >= 0

@@ -1,0 +1,251 @@
+"""Write-set / epoch-flush layer tests (DESIGN.md §2).
+
+* double-dirty rows within one epoch account exactly one flush;
+* data-before-metadata ordering inside the epoch: a crash after the data
+  flush but before the metadata (header) flush recovers the previous
+  committed state;
+* DLL / B+Tree / Hashmap recover identically through the write-set path
+  (crash mid-stream, reconstruct, compare with a pure-python reference);
+* the Pallas pack_flush gather path is bit-identical to the numpy path;
+* the checkpoint manager's DigestWriteSet skips clean leaves.
+"""
+import numpy as np
+import pytest
+
+from repro.core.arena import open_arena
+from repro.core.writeset import DigestWriteSet
+from repro.pstruct.bptree import BPTree
+from repro.pstruct.dll import DoublyLinkedList
+from repro.pstruct.hashmap import Hashmap
+
+MODES = ("partly", "full")
+
+
+# ------------------------------------------------------------- accounting
+
+
+def test_double_dirty_one_epoch_accounts_one_flush():
+    a = open_arena(None, {"r": (np.int64, (64, 8))})  # 64 B rows
+    r = a.regions["r"]
+    with a.epoch():
+        r.vol[3] = 1
+        r.mark_rows(np.array([3]))
+        r.vol[3] = 2
+        r.mark_rows(np.array([3]))      # same row again
+        r.vol[4] = 9
+        r.mark_rows(np.array([3, 4]))   # and again, plus a neighbour
+    assert a.stats.lines == 2           # rows 3 and 4, one line each
+    assert a.stats.epochs == 1
+    assert a.stats.dedup_rows == 2      # three marks of row 3 -> one flush
+    assert a.stats.saved_lines == 2     # per-call would have charged 4
+    assert (r._pview()[3] == 2).all()   # latest value won
+    assert (r._pview()[4] == 9).all()
+
+
+def test_unaligned_rows_coalesce_once_across_epoch():
+    # 16 B rows: 4 rows/line.  Marked one at a time in two separate calls
+    # per row, per-call accounting charges a line per mark; the epoch
+    # charges each distinct line once.
+    a = open_arena(None, {"r": (np.int64, (64, 2))})
+    r = a.regions["r"]
+    with a.epoch():
+        for i in range(8):
+            r.vol[i] = i
+            r.mark_rows(np.array([i]))
+    assert a.stats.lines == 2           # 8 x 16 B = 2 lines
+    assert a.stats.saved_lines == 8 - 2
+
+
+def test_mark_outside_epoch_degrades_to_per_call():
+    a = open_arena(None, {"r": (np.int64, (64, 2))})
+    r = a.regions["r"]
+    for i in range(4):
+        r.mark_rows(np.array([i]))      # no epoch: immediate per-call flush
+    assert a.stats.lines == 4           # one (shared) line charged 4x
+    assert a.stats.epochs == 0
+
+
+def test_epoch_nesting_flushes_once_at_outermost():
+    a = open_arena(None, {"r": (np.int64, (64, 8))})
+    r = a.regions["r"]
+    with a.epoch():
+        with a.epoch():
+            r.mark_rows(np.array([1]))
+        assert a.stats.lines == 0       # inner exit does not flush
+        r.mark_rows(np.array([1]))
+    assert a.stats.lines == 1
+    assert a.stats.epochs == 1
+
+
+# ------------------------------------------------- crash-ordering (§IV-C3)
+
+
+def test_crash_between_data_flush_and_meta_flush_recovers_prior_state(rng):
+    a = open_arena(None, DoublyLinkedList.layout(256, "partly"))
+    d = DoublyLinkedList(a, 256, "partly")
+    d.append_batch(rng.integers(0, 99, (20, 7)))
+    a.commit()
+    order0, data0 = d.to_list().copy(), d.data.copy()
+    gen0 = a.generation
+    # one more append whose epoch is cut at the data/metadata barrier:
+    # node rows reach PM, the header row does not (power loss mid-epoch).
+    with a.epoch():
+        d.append_batch(rng.integers(0, 99, (10, 7)))
+        a.writeset.flush(include_meta=False)
+        assert not a.writeset             # remaining meta marks are lost
+        a.crash()
+    a.reopen()
+    d.reconstruct()
+    # prior generation intact: old header -> old chain, byte-exact
+    assert a.generation == gen0
+    assert (d.to_list() == order0).all()
+    assert (d.data[order0] == data0[order0]).all()
+
+
+def test_crash_inside_epoch_discards_marks_without_corrupting_pm():
+    """crash() during an epoch must NOT let the unwinding epoch flush
+    zeroed volatile rows over committed persistent data."""
+    a = open_arena(None, {"r": (np.int64, (16, 8))})
+    r = a.regions["r"]
+    r.vol[3] = 7
+    r.persist_rows(np.array([3]))
+    a.commit()
+    with a.epoch():
+        r.vol[3] = 9
+        r.mark_rows(np.array([3]))
+        a.crash()                   # power loss: pending marks die too
+    a.reopen()
+    assert int(r.vol[3, 0]) == 7    # committed value survived
+
+
+def test_commit_inside_epoch_flushes_pending_before_flag(rng):
+    a = open_arena(None, DoublyLinkedList.layout(64, "partly"))
+    d = DoublyLinkedList(a, 64, "partly")
+    with a.epoch():
+        d.append_batch(rng.integers(0, 9, (5, 7)))
+        a.commit()                        # must drain the write set first
+        assert not a.writeset
+    a.crash()
+    a.reopen()
+    d.reconstruct()
+    assert d.count == 5
+
+
+# ------------------------------------- recovery equivalence post-refactor
+
+
+@pytest.mark.parametrize("mode", MODES)
+def test_dll_recovers_identically_via_writeset(mode, rng):
+    a = open_arena(None, DoublyLinkedList.layout(512, mode))
+    d = DoublyLinkedList(a, 512, mode)
+    ids = d.append_batch(rng.integers(0, 99, (60, 7)))
+    d.pop_front_batch(9)
+    d.delete_batch(ids[20:35])
+    order0, data0, tail0 = d.to_list().copy(), d.data.copy(), d.tail
+    a.commit()
+    a.crash()
+    a.reopen()
+    d.reconstruct()
+    order1 = d.to_list()
+    assert (order1 == order0).all()
+    assert (d.data[order1] == data0[order0]).all()
+    assert d.tail == tail0
+
+
+@pytest.mark.parametrize("mode", MODES)
+def test_bptree_recovers_identically_via_writeset(mode, rng):
+    a = open_arena(None, BPTree.layout(1024, 4096, mode))
+    t = BPTree(a, 1024, 4096, mode)
+    keys = rng.permutation(1500).astype(np.int64)
+    vals = rng.integers(0, 1 << 40, (1500, 7)).astype(np.int64)
+    ref = {}
+    for i in range(0, 1500, 97):
+        t.insert_batch(keys[i:i + 97], vals[i:i + 97])
+        for k, v in zip(keys[i:i + 97].tolist(), vals[i:i + 97]):
+            ref[k] = v
+    t.delete_batch(keys[:400])
+    for k in keys[:400].tolist():
+        ref.pop(k)
+    a.commit()
+    a.crash()
+    a.reopen()
+    t.reconstruct()
+    t.check_invariants()
+    rk = np.fromiter(ref.keys(), np.int64, len(ref))
+    ok, got = t.find_batch(rk)
+    assert ok.all()
+    assert (got == np.stack([ref[int(k)] for k in rk])).all()
+    ok, _ = t.find_batch(keys[:400])
+    assert not ok.any()
+
+
+@pytest.mark.parametrize("mode", MODES)
+def test_hashmap_recovers_identically_via_writeset(mode, rng):
+    a = open_arena(None, Hashmap.layout(2048, mode))
+    h = Hashmap(a, 2048, mode)
+    keys = rng.choice(10 ** 6, 1200, replace=False).astype(np.int64)
+    vals = rng.integers(0, 1 << 40, (1200, 7)).astype(np.int64)
+    h.insert_batch(keys, vals)
+    h.remove_batch(keys[:300])
+    ref = {int(k): vals[i] for i, k in enumerate(keys) if i >= 300}
+    a.commit()
+    a.crash()
+    a.reopen()
+    h.reconstruct()
+    assert h.check_against(ref)
+
+
+def test_partly_still_flushes_fewer_lines_than_fully(rng):
+    """The paper's central inequality survives the epoch refactor."""
+    keys = rng.permutation(2000).astype(np.int64)
+    vals = rng.integers(0, 9, (2000, 7)).astype(np.int64)
+    lines = {}
+    for mode in MODES:
+        a = open_arena(None, BPTree.layout(2048, 4096, mode))
+        t = BPTree(a, 2048, 4096, mode)
+        for i in range(0, 2000, 64):
+            t.insert_batch(keys[i:i + 64], vals[i:i + 64])
+        t.delete_batch(keys[:500])
+        lines[mode] = a.stats.lines
+    assert lines["partly"] < lines["full"]
+
+
+# ------------------------------------------------------- pack-kernel path
+
+
+def test_pack_flush_kernel_path_matches_numpy_path():
+    rng = np.random.default_rng(7)
+    rows = rng.choice(128, 40, replace=False).astype(np.int64)
+    data = rng.integers(0, 1 << 62, (128, 8)).astype(np.int64)
+    out = {}
+    for thresh in (0, 1):   # 0 = numpy gather, 1 = Pallas pack_rows
+        a = open_arena(None, {"r": (np.int64, (128, 8))},
+                       pack_flush_rows=thresh)
+        r = a.regions["r"]
+        r.vol[:] = data
+        with a.epoch():
+            r.mark_rows(rows)
+        out[thresh] = np.array(r._pview())
+    np.testing.assert_array_equal(out[0], out[1])
+    np.testing.assert_array_equal(out[1][rows], data[rows])
+
+
+# -------------------------------------------------------- DigestWriteSet
+
+
+def test_digest_writeset_skips_clean_leaves():
+    ws = DigestWriteSet()
+    assert ws.dirty("a", "d1")              # first sight: dirty
+    assert not ws.dirty("a", "d1")          # unchanged: clean
+    assert ws.dirty("a", "d2")              # content changed
+    assert ws.dirty("a", "d2", present=False)  # file missing: rewrite
+    assert ws.written == 3 and ws.skipped == 1
+
+
+def test_kvcache_alloc_is_single_epoch():
+    from repro.serve.kvcache import PagedAllocator, PagedConfig
+    pa = PagedAllocator(PagedConfig(n_pages=32, page_tokens=4))
+    base = pa.arena.stats.snapshot()
+    pa.alloc(7, 4)
+    d = pa.arena.stats.delta(base)
+    assert d.epochs == 1                    # evict+append+commit fused
