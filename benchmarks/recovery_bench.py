@@ -1,0 +1,219 @@
+"""recovery_bench — §V-F reconstruction-time benchmarks.
+
+The paper's bargain is two-sided: persist fewer fields at write time
+(BENCH_flush.json measures that side), pay to *recreate* them after a
+crash.  This bench measures the pay side, through the unified recovery
+subsystem (core/recovery.py):
+
+* structure recovery time vs size, partly- vs fully-persistent, for all
+  three paper structures — each row also carries the write-side line
+  count of building the structure, so partly's write saving can be read
+  against its reconstruction cost (the §V-F tradeoff curve);
+* serving-engine recovery, staged (request hashmap -> LRU pages ->
+  batched slab scan + grouped re-prefill), via the RecoveryReport;
+* the vectorized chain-order primitive vs the seed's scalar NEXT walk
+  at >= 100k entries (the pointer-doubling speedup every recovery path
+  now rides on).
+
+Emits BENCH_recovery.json next to the repo root (CI artifact).
+
+Run: ``PYTHONPATH=src python -m benchmarks.recovery_bench [--quick]``
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from benchmarks.common import fmt_table, make_structure
+from repro.core.recovery import RecoveryManager, chain_order
+
+MODES = ("full", "partly")
+STRUCTS = ("dll", "bptree", "hashmap")
+RECONSTRUCTOR = {"dll": "pstruct.dll", "bptree": "pstruct.bptree",
+                 "hashmap": "pstruct.hashmap"}
+
+
+# ---------------------------------------------------------- structures
+
+def _build(kind: str, mode: str, n: int, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    a, s = make_structure(kind, mode, n + 1024, synth_line_ns=0)
+    vals = rng.integers(0, 1 << 40, (4096, 7)).astype(np.int64)
+    keys = rng.permutation(2 * n).astype(np.int64)
+    for i in range(0, n, 4096):
+        m = min(4096, n - i)
+        if kind == "dll":
+            s.append_batch(vals[:m])
+        else:
+            s.insert_batch(keys[i:i + m], vals[:m])
+    a.commit()
+    return a, s
+
+
+def _verify(kind: str, s, n: int) -> None:
+    if kind == "dll":
+        assert s.count == n, (s.count, n)
+    elif kind == "bptree":
+        s.check_invariants()
+    else:
+        assert s.size == n, (s.size, n)
+
+
+def structure_rows(sizes: List[int]) -> List[Dict]:
+    rows = []
+    for kind in STRUCTS:
+        for n in sizes:
+            per_mode = {}
+            for mode in MODES:
+                a, s = _build(kind, mode, n)
+                build_lines = a.stats.lines
+                a.crash()
+                mgr = RecoveryManager(a)
+                mgr.add(kind, RECONSTRUCTOR[kind], s)
+                rep = mgr.recover()
+                _verify(kind, s, n)
+                row = {"structure": kind, "mode": mode, "n": n,
+                       "build_lines": build_lines,
+                       "recover_s": round(rep.total_seconds, 6),
+                       "reopen_s": round(rep.seconds("reopen"), 6),
+                       "rebuild_s": round(rep.seconds(kind), 6)}
+                per_mode[mode] = row
+                rows.append(row)
+            # the §V-F tradeoff, read off directly: write lines saved by
+            # partly vs the recovery time it costs
+            full, partly = per_mode["full"], per_mode["partly"]
+            saved = full["build_lines"] - partly["build_lines"]
+            partly["write_lines_saved_vs_full"] = (
+                f"{100 * saved / max(full['build_lines'], 1):.1f}%")
+            partly["recover_cost_vs_full"] = (
+                f"{partly['recover_s'] / max(full['recover_s'], 1e-9):.2f}x")
+    return rows
+
+
+# ------------------------------------------------------ serving engine
+
+def engine_report(n_requests: int, steps: int) -> Dict:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import base, registry
+    from repro.models.model import build
+    from repro.serve.engine import EngineConfig, ServingEngine
+
+    model = build(base.reduced(registry.get("llama3.2-3b")),
+                  compute_dtype=jnp.float32)
+    params = model.init_params(jax.random.PRNGKey(0))
+    ec = EngineConfig(max_batch=n_requests, s_max=32,
+                      max_requests=4 * n_requests)
+    eng = ServingEngine(model, params, ec)
+    rng = np.random.default_rng(0)
+    for rid in range(n_requests):
+        plen = int(rng.integers(3, 9))
+        eng.add_request(100 + rid,
+                        rng.integers(1, model.cfg.vocab, plen).astype(np.int64))
+    for _ in range(steps):
+        eng.step()
+    eng.crash()
+    sec = eng.recover()
+    rep = eng.last_recovery
+    return {"requests": n_requests, "decode_steps": steps,
+            "total_s": round(sec, 6),
+            "stages": {s.name: round(s.seconds, 6) for s in rep.stages},
+            "prefill_groups": rep.stage("engine").detail["prefill_groups"]}
+
+
+# ------------------------------------------------- chain-order speedup
+
+def _scalar_order(nxt: np.ndarray, head: int, count: int) -> np.ndarray:
+    """The seed's sequential NEXT walk (pre-refactor recovery loop)."""
+    out = np.empty(count, np.int64)
+    cur = head
+    for i in range(count):
+        out[i] = cur
+        cur = int(nxt[cur])
+    return out
+
+
+def chain_row(n: int, repeats: int = 3) -> Dict:
+    rng = np.random.default_rng(0)
+    perm = rng.permutation(n)
+    nxt = np.full(n, -1, np.int64)
+    nxt[perm[:-1]] = perm[1:]
+    head = int(perm[0])
+    want = _scalar_order(nxt, head, n)     # warm (page in nxt)
+    scalar_s = min(_timed(lambda: _scalar_order(nxt, head, n))
+                   for _ in range(repeats))
+    chain_order(nxt, head, n)              # warm
+    vector_s = min(_timed(lambda: chain_order(nxt, head, n))
+                   for _ in range(repeats))
+    np.testing.assert_array_equal(chain_order(nxt, head, n), want)
+    return {"n": n, "scalar_s": round(scalar_s, 6),
+            "vector_s": round(vector_s, 6),
+            "speedup": round(scalar_s / max(vector_s, 1e-9), 2)}
+
+
+def _timed(fn) -> float:
+    t0 = time.perf_counter()
+    fn()
+    return time.perf_counter() - t0
+
+
+# --------------------------------------------------------------- main
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--no-engine", action="store_true")
+    ap.add_argument("--out", default="BENCH_recovery.json")
+    args = ap.parse_args()
+    sizes = [2000, 8000] if args.quick else [10000, 100000]
+    chain_sizes = [100000] if args.quick else [100000, 250000, 1000000]
+
+    rows = structure_rows(sizes)
+    cols = ["structure", "mode", "n", "build_lines", "recover_s",
+            "rebuild_s"]
+    print(fmt_table(rows, cols))
+    for r in rows:
+        if "write_lines_saved_vs_full" in r:
+            print(f"  {r['structure']}/{r['n']}: partly saves "
+                  f"{r['write_lines_saved_vs_full']} write lines, pays "
+                  f"{r['recover_cost_vs_full']} recovery time")
+
+    chain = [chain_row(n) for n in chain_sizes]
+    for c in chain:
+        print(f"chain_order @ {c['n']}: scalar {c['scalar_s']}s, "
+              f"vectorized {c['vector_s']}s -> {c['speedup']}x")
+
+    engine = None
+    if not args.no_engine:
+        engine = engine_report(n_requests=2 if args.quick else 4,
+                               steps=2 if args.quick else 4)
+        print(f"engine recovery: {engine['total_s']}s, "
+              f"stages {engine['stages']}")
+
+    with open(args.out, "w") as f:
+        json.dump({"workload": "build -> commit -> crash -> recover "
+                               "(RecoveryManager, §V-F)",
+                   "sizes": sizes, "rows": rows,
+                   "chain_order": chain, "engine": engine}, f, indent=1)
+    print(f"-> {args.out}")
+    # the vectorized primitive must beat the seed scalar walk at >=100k
+    # entries (larger sizes are reported as measured — the 10**6 point
+    # sits near the jump-table cache crossover on small hosts).  Quick
+    # (CI smoke) mode records without asserting: on a contended shared
+    # runner the ~2x win can measure near 1.0 and would flake the build.
+    if not args.quick:
+        assert chain[0]["n"] >= 100000 and chain[0]["speedup"] > 1.0, chain
+    # partly must never flush more write lines than fully
+    for r in rows:
+        if "write_lines_saved_vs_full" in r:
+            assert not r["write_lines_saved_vs_full"].startswith("-"), r
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -37,6 +37,7 @@ import numpy as np
 
 from repro.core import policy as pol
 from repro.core import reconstruct as rec
+from repro.core.recovery import RecoveryReport
 from repro.core.writeset import DigestWriteSet
 from repro.kernels import ops as kops
 from repro.train.state import TrainState
@@ -74,6 +75,9 @@ class CheckpointManager:
         # discipline as the arena's row write set (DESIGN.md §2).
         self._writeset = DigestWriteSet()
         self.last_report: Optional[SaveReport] = None
+        # restore() reports through the same per-stage format as every
+        # other recovery path (core.recovery.RecoveryReport)
+        self.last_recovery: Optional[RecoveryReport] = None
 
     # ------------------------------------------------------------------ save
     def save(self, state: TrainState, blocking: bool = True) -> SaveReport:
@@ -175,13 +179,18 @@ class CheckpointManager:
         None for single-device).  DERIVABLE leaves are reconstructed, not
         read."""
         self.wait()
+        t_all = time.perf_counter()
+        report = RecoveryReport()
+        t0 = time.perf_counter()
         with open(os.path.join(self.dir, "manifest.json")) as f:
             manifest = json.load(f)
+        step = manifest["step"]
+        report.add("manifest", time.perf_counter() - t0, step=step)
+        report.generation = step
         sd = state_spec._asdict()
         flat, treedef = jax.tree_util.tree_flatten_with_path(sd)
         sflat = jax.tree.leaves(shardings) if shardings is not None \
             else [None] * len(flat)
-        step = manifest["step"]
         seed = None
         # first pass: essential scalars we need for reconstruction
         for pth, spec in flat:
@@ -193,27 +202,43 @@ class CheckpointManager:
             seed = 0
 
         out = []
+        times = {"load_persisted": 0.0, "reconstruct_derivable": 0.0,
+                 "rewarm_approximable": 0.0, "device_put": 0.0}
+        counts = {k: 0 for k in times}
         for (pth, spec), shard in zip(flat, sflat):
             pstr = pol.path_str(pth)
             kind = pol.classify(pth, self.policy.rules)
             ent = manifest["leaves"].get(pstr)
             shape = tuple(getattr(spec, "shape", ()))
             dtype = getattr(spec, "dtype", np.float32)
+            t0 = time.perf_counter()
             if ent is not None:
                 arr = self._load_leaf(ent, shape, dtype)
+                stage = "load_persisted"
             elif kind == pol.Kind.DERIVABLE:
                 arr = self._reconstruct_leaf(pstr, seed, step, shape, dtype)
+                stage = "reconstruct_derivable"
             elif kind == pol.Kind.APPROXIMABLE:
                 # drop policy: re-warm from zeros (bias correction restarts
                 # cleanly because update() corrects with the global step)
                 arr = np.zeros(shape, dtype)
+                stage = "rewarm_approximable"
             else:
                 raise KeyError(f"essential leaf {pstr} missing from checkpoint")
+            times[stage] += time.perf_counter() - t0
+            counts[stage] += 1
+            t0 = time.perf_counter()
             if shard is not None:
                 arr = jax.device_put(arr, shard)
             else:
                 arr = jnp.asarray(arr)
+            times["device_put"] += time.perf_counter() - t0
+            counts["device_put"] += 1
             out.append(arr)
+        for stage, secs in times.items():
+            report.add(stage, secs, leaves=counts[stage])
+        report.total_seconds = time.perf_counter() - t_all
+        self.last_recovery = report
         sd_new = jax.tree.unflatten(treedef, out)
         return TrainState(**sd_new)
 

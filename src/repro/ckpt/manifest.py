@@ -3,7 +3,10 @@
 Maps step -> (generation, bytes, n_leaves) across a training run — the
 framework-level manifest workload for the paper's B+Tree (leaves persisted,
 inner levels rebuilt on open).  Survives crashes with the same commit
-protocol as the checkpoints it catalogs.
+protocol as the checkpoints it catalogs; the open-after-crash rebuild
+routes through core.recovery.RecoveryManager, and the history queries ride
+the tree's vectorized chain-order traversals (BPTree.keys_in_order /
+max_key) instead of scalar NEXT walks.
 """
 from __future__ import annotations
 
@@ -13,6 +16,7 @@ from typing import Optional, Tuple
 import numpy as np
 
 from repro.core.arena import open_arena
+from repro.core.recovery import RecoveryManager, RecoveryReport
 from repro.pstruct.bptree import BPTree
 
 
@@ -24,8 +28,11 @@ class CheckpointCatalog:
         self.arena = open_arena(
             path, BPTree.layout(cap_nodes, capacity, mode, name="cat"))
         self.tree = BPTree(self.arena, cap_nodes, capacity, mode, name="cat")
+        self.last_recovery: Optional[RecoveryReport] = None
         if exists and self.arena.header_valid():
-            self.tree.reconstruct()
+            mgr = RecoveryManager(self.arena)
+            mgr.add("catalog", "pstruct.bptree", self.tree)
+            self.last_recovery = mgr.recover()
 
     def record(self, step: int, generation: int, nbytes: int,
                n_leaves: int) -> None:
@@ -35,33 +42,12 @@ class CheckpointCatalog:
         self.arena.commit()
 
     def latest(self) -> Optional[Tuple[int, int, int, int]]:
-        hv = self.tree.header.vol[0]
-        if hv[3] == 0:  # H_COUNT
+        key = self.tree.max_key()
+        if key is None:
             return None
-        # walk to the right-most leaf via descent on +inf
-        ok, vals = self.tree.find_batch(np.array([self._max_key()], np.int64))
-        key = self._max_key()
+        ok, vals = self.tree.find_batch(np.array([key], np.int64))
         return (key, int(vals[0, 0]), int(vals[0, 1]), int(vals[0, 2]))
 
-    def _max_key(self) -> int:
-        import repro.pstruct.bptree as bt
-        cur = int(self.tree.header.vol[0, bt.H_FIRST_LEAF])
-        last = None
-        while cur != bt.NULL:
-            row = self.tree.nodes.vol[cur]
-            nk = int(row[bt.C_NK])
-            if nk:
-                last = int(row[bt.K0 + nk - 1])
-            cur = int(row[bt.C_NEXT])
-        return last
-
     def steps(self) -> np.ndarray:
-        import repro.pstruct.bptree as bt
-        out = []
-        cur = int(self.tree.header.vol[0, bt.H_FIRST_LEAF])
-        while cur != bt.NULL:
-            row = self.tree.nodes.vol[cur]
-            nk = int(row[bt.C_NK])
-            out.extend(row[bt.K0:bt.K0 + nk].tolist())
-            cur = int(row[bt.C_NEXT])
-        return np.asarray(out, np.int64)
+        """All recorded steps in order (vectorized leaf-chain gather)."""
+        return self.tree.keys_in_order()

@@ -220,6 +220,14 @@ class Arena:
         magic, _, gen, valid = struct.unpack(_HDR_FMT, raw)
         return magic == _MAGIC and bool(valid)
 
+    def header_generation(self) -> int:
+        """Committed generation as persisted in the header — unlike the
+        in-memory ``generation`` counter, this survives a fresh-process
+        reopen."""
+        raw = bytes(self._mm[: struct.calcsize(_HDR_FMT)])
+        magic, _, gen, _ = struct.unpack(_HDR_FMT, raw)
+        return int(gen) if magic == _MAGIC else 0
+
     def commit(self) -> None:
         """Data-before-metadata ordering: drain the write set, flush file
         contents, then set the valid flag (the paper's initialization
@@ -248,9 +256,12 @@ class Arena:
             r.vol = np.zeros(r.shape, r.dtype)
 
     def reopen(self) -> None:
-        """Reload every region's volatile copy from persistent memory."""
+        """Reload every region's volatile copy from persistent memory,
+        and re-anchor the in-memory generation counter to the committed
+        one (a fresh process starts at 0 otherwise)."""
         for r in self.regions.values():
             r.load()
+        self.generation = max(self.generation, self.header_generation())
 
     # -- accounting ---------------------------------------------------------
     def _account_range(self, byte_off: int, nbytes: int) -> None:

@@ -5,6 +5,17 @@ a reconstructor which rebuilds it from essential state — the generalization
 of the paper's three per-structure reconstruction algorithms (§IV-*3).
 Reconstructors must be *pure* given (essential_state, static config): same
 inputs => identical rebuilt state, which the crash tests assert.
+
+Registrants (each module registers at import time; RecoveryManager in
+core/recovery.py consumes the registry by name, in dependency order):
+
+* trainer-state leaves below ("rng", "schedule", "pipeline_cursor");
+* "pstruct.dll" / "pstruct.bptree" / "pstruct.hashmap" — the three
+  paper structures' rebuild logic (pstruct/*.py), taking the structure
+  object with its regions already loaded from persistent memory;
+* "serve.paged_alloc" / "serve.engine" — the paged-KV allocator's page
+  metadata and the serving engine's batched slab-scan + re-prefill
+  (serve/kvcache.py, serve/engine.py).
 """
 from __future__ import annotations
 

@@ -13,6 +13,7 @@ from typing import Optional, Tuple
 import numpy as np
 
 from repro.core.arena import Arena, open_arena
+from repro.core.recovery import RecoveryManager, RecoveryReport
 from repro.pstruct.bptree import BPTree
 
 
@@ -23,6 +24,7 @@ class SampleIndex:
         self.arena = open_arena(
             path, BPTree.layout(cap_nodes, capacity, mode, name="idx"))
         self.tree = BPTree(self.arena, cap_nodes, capacity, mode, name="idx")
+        self.last_recovery: Optional[RecoveryReport] = None
 
     def add(self, sample_ids: np.ndarray, shards: np.ndarray,
             offsets: np.ndarray, lengths: np.ndarray) -> None:
@@ -39,8 +41,11 @@ class SampleIndex:
         return ok, vals[:, 0], vals[:, 1], vals[:, 2]
 
     def recover(self) -> float:
-        """Reconstruct after crash; returns seconds (paper §V-F metric)."""
-        import time
-        t0 = time.perf_counter()
-        self.tree.reconstruct()
-        return time.perf_counter() - t0
+        """Reconstruct after crash via the unified recovery manager;
+        returns seconds (paper §V-F metric; the staged RecoveryReport
+        lands in ``last_recovery``)."""
+        mgr = RecoveryManager(self.arena)
+        mgr.add("index", "pstruct.bptree", self.tree)
+        report = mgr.recover()
+        self.last_recovery = report
+        return report.total_seconds

@@ -1,0 +1,112 @@
+"""chain_order — pointer-doubling chain reconstruction Pallas kernel.
+
+Device-side variant of the recovery layer's shared chain primitive
+(core/recovery.py): one `jump_double` call advances every node's jump
+pointer by its own current distance (jump' = jump[jump], NULL-absorbing)
+and accumulates the hop count, so log2(N) rounds resolve the order/length
+of a NULL-terminated chain — the §V-F reconstruction walk at hardware
+speed instead of Python-loop speed.
+
+TPU adaptation (same dynamic-gather pattern as pack_flush/hash_probe):
+pointer chasing doesn't vectorize as lane ops, so the per-node gather
+``jump[jump[i]]`` is steered by the *scalar-prefetched* jump array in the
+BlockSpec index_map; the kernel body only masks the NULL-absorbed lanes.
+"""
+from __future__ import annotations
+
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NULL = -1
+
+
+def _double_kernel(jmp_ref, jump_at_ref, cnt_at_ref, cnt_ref,
+                   jump_out, cnt_out):
+    """One doubling round for node i = program_id(0).
+
+    jump_at/cnt_at blocks are steered to row jump[i] (clamped to 0 when
+    absorbed); cnt block is row i.  Invariant maintained: after k rounds
+    jump[i] = node min(2^k, L(i)) hops after i, cnt[i] = min(2^k, L(i)).
+    """
+    i = pl.program_id(0)
+    live = jmp_ref[i] >= 0
+    jump_out[...] = jnp.where(live, jump_at_ref[...], NULL)
+    cnt_out[...] = cnt_ref[...] + jnp.where(live, cnt_at_ref[...], 0)
+
+
+def jump_double(jump: jax.Array, cnt: jax.Array, *,
+                interpret: bool = True) -> Tuple[jax.Array, jax.Array]:
+    """jump, cnt: (N,) int32.  Returns (jump', cnt') after one doubling
+    round: jump'[i] = jump[jump[i]] (NULL absorbing), cnt'[i] = cnt[i] +
+    cnt[jump[i]] for live lanes.  Out-of-range pointers terminate like
+    NULL (the shared torn-epoch contract of core.recovery.jump_tables):
+    sanitized here, so every round's output is in-range-or-NULL."""
+    n = jump.shape[0]
+    jump = jnp.where((jump >= 0) & (jump < n), jump, NULL)
+    grid = (n,)
+    spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1),
+                         lambda i, j_ref: (jnp.maximum(j_ref[i], 0), 0)),
+            pl.BlockSpec((1, 1),
+                         lambda i, j_ref: (jnp.maximum(j_ref[i], 0), 0)),
+            pl.BlockSpec((1, 1), lambda i, j_ref: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1), lambda i, j_ref: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i, j_ref: (i, 0)),
+        ],
+    )
+    j2, c2 = pl.pallas_call(
+        _double_kernel,
+        grid_spec=spec,
+        out_shape=(jax.ShapeDtypeStruct((n, 1), jnp.int32),
+                   jax.ShapeDtypeStruct((n, 1), jnp.int32)),
+        interpret=interpret,
+    )(jump, jump[:, None], cnt[:, None], cnt[:, None])
+    return j2[:, 0], c2[:, 0]
+
+
+def chain_tables_device(nxt: np.ndarray, bits: int, *,
+                        interpret: bool = True
+                        ) -> Tuple[List[np.ndarray], np.ndarray]:
+    """Binary-lifting tables via the kernel: returns ([jump^(2^k) for
+    k < bits], counts) with counts[i] = min(2^bits, chain length from i)."""
+    jump = jnp.asarray(nxt, jnp.int32)
+    cnt = jnp.ones(nxt.shape[0], jnp.int32)
+    tables = [np.asarray(jump, np.int64)]
+    for _ in range(bits - 1):
+        jump, cnt = jump_double(jump, cnt, interpret=interpret)
+        tables.append(np.asarray(jump, np.int64))
+    # one more round so counts saturate past 2^(bits-1)-long chains
+    _, cnt = jump_double(jump, cnt, interpret=interpret)
+    return tables, np.asarray(cnt, np.int64)
+
+
+def chain_order_device(nxt: np.ndarray, head: int, *,
+                       interpret: bool = True) -> np.ndarray:
+    """Full device-built chain order: the doubling rounds run in the
+    Pallas kernel; the final node-at-position extraction is a cheap
+    O(count log count) gather off the returned tables."""
+    if head == NULL:
+        return np.empty(0, np.int64)
+    n = nxt.shape[0]
+    bits = max(1, int(n).bit_length())
+    tables, cnt = chain_tables_device(nxt, bits, interpret=interpret)
+    count = int(cnt[head])
+    if count > n:
+        raise RuntimeError("cycle in chain")
+    pos = np.arange(count)
+    cur = np.full(count, head, np.int64)
+    for k in range(len(tables)):
+        m = (pos >> k) & 1 == 1
+        if m.any():
+            cur[m] = tables[k][cur[m]]
+    return cur

@@ -49,6 +49,15 @@ def probe_ref(keys_table: jax.Array, queries: jax.Array,
     return jnp.where(found, bucket_ids * BUCKET + lane, -1).astype(jnp.int32)
 
 
+def jump_double_ref(jump: jax.Array, cnt: jax.Array):
+    """Oracle for chain_order.jump_double: one pointer-doubling round
+    (out-of-range pointers terminate like NULL)."""
+    live = (jump >= 0) & (jump < jump.shape[0])
+    safe = jnp.where(live, jump, 0)
+    return (jnp.where(live, jump[safe], -1),
+            cnt + jnp.where(live, cnt[safe], 0))
+
+
 def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
                         causal: bool = True, scale=None) -> jax.Array:
     """O(S^2) oracle for flash_attention.  q: (H, Sq, D); k,v: (H, Skv, D)."""

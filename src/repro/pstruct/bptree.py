@@ -29,12 +29,13 @@ granularity.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro.core import reconstruct as rec
 from repro.core.arena import Arena, FlushStats
-from repro.pstruct.dll import order_from_next
+from repro.core.recovery import chain_order
 
 ORDER = 19
 MAX_KEYS = ORDER - 1           # 18
@@ -440,70 +441,90 @@ class BPTree:
             self._write_inner(parent, keysv, ptrs)
             self._mark_nodes(np.array([parent]))
 
+    # ---------------- traversal ----------------
+    def leaves(self) -> np.ndarray:
+        """Leaf ids in chain order via the shared vectorized primitive —
+        the one place that knows how to enumerate the persistent NEXT
+        chain (sliced at the committed fresh-water mark; empty for an
+        empty tree)."""
+        hv = self.header.vol[0]
+        first = int(hv[H_FIRST_LEAF])
+        if hv[H_FLAG] != 1 or first == NULL:
+            return np.empty(0, np.int64)
+        fresh = int(hv[H_FRESH_NODES])
+        return chain_order(
+            self.nodes.vol[:fresh, C_NEXT].astype(np.int64), first)
+
+    def keys_in_order(self) -> np.ndarray:
+        """All keys in sorted (leaf-chain) order — one masked gather over
+        the leaf rows, no per-leaf Python loop."""
+        leaves = self.leaves()
+        if leaves.size == 0:
+            return np.empty(0, np.int64)
+        rows = self.nodes.vol[leaves]
+        nk = rows[:, C_NK]
+        keymat = rows[:, K0:K1].astype(np.int64)
+        valid = np.arange(MAX_KEYS)[None, :] < nk[:, None]
+        return keymat[valid]
+
+    def max_key(self) -> Optional[int]:
+        """Largest key, read off the last non-empty leaf in O(chain
+        enumeration) — no full key materialization."""
+        leaves = self.leaves()
+        if leaves.size == 0:
+            return None
+        nks = self.nodes.vol[leaves, C_NK]
+        ne = np.nonzero(nks > 0)[0]
+        if ne.size == 0:
+            return None
+        row = self.nodes.vol[leaves[ne[-1]]]
+        return int(row[K0 + int(nks[ne[-1]]) - 1])
+
     # ---------------- crash / reconstruction ----------------
     def reconstruct(self) -> None:
+        """Thin shim over the registered pure reconstructor — recovery
+        paths route through core.recovery.RecoveryManager, which loads
+        the regions once and times the stage."""
         self.header.load()
         self.nodes.load()
         self.records.load()
-        hv = self.header.vol[0]
-        if hv[H_FLAG] != 1:
-            # uninitialized image recovers as an empty tree (§IV-D3 validity
-            # check on the root node)
-            hv[:] = 0
-            hv[H_ROOT] = NULL
-            hv[H_FIRST_LEAF] = NULL
-            self.leaf_prev[:] = NULL
-            self._free_nodes = []
-            self._free_recs = []
-            return
-        if self.mode == "full":
-            self._rebuild_volatile_only()
-            return
-        first = int(hv[H_FIRST_LEAF])
-        fresh = int(hv[H_FRESH_NODES])
-        if first == NULL:
-            hv[H_ROOT] = NULL
-            return
-        # 1. enumerate leaves via the persistent next chain
-        nxt = self.nodes.vol[:fresh, C_NEXT].astype(np.int64)
-        count = _chain_len(nxt, first)
-        leaves = order_from_next(nxt, first, count)
-        # 2. leaf prev (volatile redundancy)
-        self.leaf_prev[:] = NULL
-        self.leaf_prev[leaves[1:]] = leaves[:-1].astype(np.int32)
-        # 3. bulk-load inner levels, bucket size = ORDER (paper §IV-D:
-        #    maximum bucket -> fewest levels, matches 256B granularity)
-        level = leaves
-        # subtree minima: separator for child c is min(subtree(c)), which
-        # for leaves is K0 but for inner children must be tracked explicitly
-        mins = self.nodes.vol[leaves, K0].astype(np.int64)
-        # wipe any stale inner rows: everything not a live leaf is free
-        live = np.zeros(self.cap_nodes, bool)
-        live[level] = True
-        while len(level) > 1:
-            n_parents = (len(level) + ORDER - 1) // ORDER
-            parents = self._alloc_nodes_reconstruct(n_parents, live)
-            new_mins = np.empty(n_parents, np.int64)
-            for pi in range(n_parents):
-                kids = level[pi * ORDER:(pi + 1) * ORDER]
-                kid_mins = mins[pi * ORDER:(pi + 1) * ORDER]
-                self._write_inner(int(parents[pi]), kid_mins[1:].tolist(),
-                                  kids.tolist())
-                self.nodes.vol[kids, C_PARENT] = parents[pi]
-                new_mins[pi] = kid_mins[0]
-            level, mins = parents, new_mins
-        root = int(level[0])
-        self.nodes.vol[root, C_PARENT] = NULL
-        hv[H_ROOT] = root
-        # 4. free lists: records referenced by live leaves are live
-        self._free_nodes = np.nonzero(~live[:int(hv[H_FRESH_NODES])])[0].tolist()
+        rec.get("pstruct.bptree")(self)
+
+    def _bulk_load_level(self, parents: np.ndarray, level: np.ndarray,
+                         mins: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+        """Write one inner level in a single vectorized pass: bucket ORDER
+        children per parent, build all parent rows in one (P, 64) buffer,
+        scatter children's parent pointers once."""
+        n_parents = len(parents)
+        n_level = len(level)
+        kids = np.zeros((n_parents, ORDER), np.int64)
+        kids.reshape(-1)[:n_level] = level
+        kmins = np.zeros((n_parents, ORDER), np.int64)
+        kmins.reshape(-1)[:n_level] = mins
+        counts = np.minimum(ORDER, n_level - np.arange(n_parents) * ORDER)
+        rowbuf = np.zeros((n_parents, 64), np.int32)
+        rowbuf[:, C_NK] = (counts - 1).astype(np.int32)
+        keymask = np.arange(MAX_KEYS)[None, :] < (counts - 1)[:, None]
+        rowbuf[:, K0:K1] = np.where(keymask, kmins[:, 1:], 0).astype(np.int32)
+        ptrmask = np.arange(ORDER)[None, :] < counts[:, None]
+        rowbuf[:, P0:P0 + ORDER] = np.where(ptrmask, kids, 0).astype(np.int32)
+        rowbuf[:, C_NEXT] = NULL
+        rowbuf[:, C_PARENT] = NULL
+        self.nodes.vol[parents] = rowbuf
+        self.nodes.vol[level, C_PARENT] = np.repeat(
+            parents.astype(np.int32), ORDER)[:n_level]
+        return parents.astype(np.int64), kmins[:, 0]
+
+    def _live_record_mask(self, leaves: np.ndarray) -> np.ndarray:
+        """Records referenced by live leaves, one vectorized gather."""
         rec_live = np.zeros(self.cap_records, bool)
-        for leaf in leaves.tolist():
-            row = self.nodes.vol[leaf]
-            nk = int(row[C_NK])
-            rec_live[row[P0:P0 + nk].astype(np.int64)] = True
-        self._free_recs = np.nonzero(
-            ~rec_live[:int(hv[H_FRESH_RECS])])[0].tolist()
+        if leaves.size:
+            rows = self.nodes.vol[leaves]
+            nk = rows[:, C_NK]
+            recmat = rows[:, P0:P0 + MAX_KEYS].astype(np.int64)
+            valid = np.arange(MAX_KEYS)[None, :] < nk[:, None]
+            rec_live[recmat[valid]] = True
+        return rec_live
 
     def _alloc_nodes_reconstruct(self, m: int, live: np.ndarray) -> np.ndarray:
         """Allocate inner nodes during rebuild from non-live slots."""
@@ -524,18 +545,15 @@ class BPTree:
         and free lists."""
         hv = self.header.vol[0]
         fresh = int(hv[H_FRESH_NODES])
-        first = int(hv[H_FIRST_LEAF])
         self.leaf_prev[:] = NULL
-        if first == NULL:
+        leaves = self.leaves()
+        if leaves.size == 0:
             return
-        nxt = self.nodes.vol[:fresh, C_NEXT].astype(np.int64)
-        count = _chain_len(nxt, first)
-        leaves = order_from_next(nxt, first, count)
         self.leaf_prev[leaves[1:]] = leaves[:-1].astype(np.int32)
         live = np.zeros(self.cap_nodes, bool)
         live[leaves] = True
         cur = leaves
-        while True:
+        while True:   # one round per tree LEVEL (O(log n) rounds)
             parents = np.unique(self.nodes.vol[cur, C_PARENT])
             parents = parents[parents != NULL]
             if parents.size == 0:
@@ -543,47 +561,86 @@ class BPTree:
             live[parents] = True
             cur = parents
         self._free_nodes = np.nonzero(~live[:fresh])[0].tolist()
-        rec_live = np.zeros(self.cap_records, bool)
-        for leaf in leaves.tolist():
-            row = self.nodes.vol[leaf]
-            rec_live[row[P0:P0 + int(row[C_NK])].astype(np.int64)] = True
+        rec_live = self._live_record_mask(leaves)
         self._free_recs = np.nonzero(
             ~rec_live[:int(hv[H_FRESH_RECS])])[0].tolist()
 
     # ---------------- verification ----------------
     def check_invariants(self) -> None:
+        """Leaf-chain order/sortedness/count — vectorized over the whole
+        chain (one chain_order + masked matrix checks)."""
         hv = self.header.vol[0]
         if hv[H_FLAG] == 0 or hv[H_ROOT] == NULL:
             return
-        first = int(hv[H_FIRST_LEAF])
-        total = 0
-        cur = first
-        last_key = None
-        while cur != NULL:
-            row = self.nodes.vol[cur]
-            assert row[C_LEAF] == 1
-            nk = int(row[C_NK])
-            ks = row[K0:K0 + nk]
-            assert (np.diff(ks) > 0).all(), "leaf keys not sorted"
-            if last_key is not None and nk:
-                assert ks[0] > last_key, "leaf chain out of order"
-            if nk:
-                last_key = ks[-1]
-            total += nk
-            cur = int(row[C_NEXT])
+        leaves = self.leaves()
+        if leaves.size == 0:
+            assert int(hv[H_COUNT]) == 0, int(hv[H_COUNT])
+            return
+        rows = self.nodes.vol[leaves]
+        assert (rows[:, C_LEAF] == 1).all(), "non-leaf on leaf chain"
+        nk = rows[:, C_NK]
+        keymat = rows[:, K0:K1].astype(np.int64)
+        valid = np.arange(MAX_KEYS)[None, :] < nk[:, None]
+        sorted_ok = (np.diff(keymat, axis=1) > 0) | ~valid[:, 1:]
+        assert sorted_ok.all(), "leaf keys not sorted"
+        ne = nk > 0
+        firsts = keymat[ne, 0]
+        lasts = keymat[ne, nk[ne] - 1]
+        assert (firsts[1:] > lasts[:-1]).all(), "leaf chain out of order"
+        total = int(nk.sum())
         assert total == int(hv[H_COUNT]), (total, int(hv[H_COUNT]))
 
     def flush_stats(self) -> FlushStats:
         return self.arena.stats
 
 
-def _chain_len(nxt: np.ndarray, head: int) -> int:
-    """Length of the NULL-terminated chain starting at head."""
-    steps = 0
-    cur = head
-    while cur != NULL:
-        steps += 1
-        cur = int(nxt[cur]) if cur < len(nxt) else NULL
-        if steps > len(nxt) + 1:
-            raise RuntimeError("cycle in leaf chain")
-    return steps
+@rec.register("pstruct.bptree")
+def _reconstruct_bptree(t: "BPTree") -> dict:
+    """Pure rebuild (paper §IV-D3): enumerate leaves via the persistent
+    NEXT chain (shared chain_order primitive — count derived by pointer
+    doubling, cycle-checked), then bulk-load inner levels bucketing ORDER
+    children per parent, one vectorized pass per level."""
+    hv = t.header.vol[0]
+    if hv[H_FLAG] != 1:
+        # uninitialized image recovers as an empty tree (§IV-D3 validity
+        # check on the root node)
+        hv[:] = 0
+        hv[H_ROOT] = NULL
+        hv[H_FIRST_LEAF] = NULL
+        t.leaf_prev[:] = NULL
+        t._free_nodes = []
+        t._free_recs = []
+        return {"mode": t.mode, "count": 0}
+    if t.mode == "full":
+        t._rebuild_volatile_only()
+        return {"mode": "full", "count": int(hv[H_COUNT])}
+    # 1. enumerate leaves via the persistent next chain
+    leaves = t.leaves()
+    if leaves.size == 0:
+        hv[H_ROOT] = NULL
+        return {"mode": "partly", "count": 0}
+    # 2. leaf prev (volatile redundancy)
+    t.leaf_prev[:] = NULL
+    t.leaf_prev[leaves[1:]] = leaves[:-1].astype(np.int32)
+    # 3. bulk-load inner levels, bucket size = ORDER (paper §IV-D:
+    #    maximum bucket -> fewest levels, matches 256B granularity);
+    #    subtree minima are the separators, tracked per level
+    level = leaves
+    mins = t.nodes.vol[leaves, K0].astype(np.int64)
+    # wipe any stale inner rows: everything not a live leaf is free
+    live = np.zeros(t.cap_nodes, bool)
+    live[level] = True
+    while len(level) > 1:
+        n_parents = (len(level) + ORDER - 1) // ORDER
+        parents = t._alloc_nodes_reconstruct(n_parents, live)
+        level, mins = t._bulk_load_level(parents, level, mins)
+    root = int(level[0])
+    t.nodes.vol[root, C_PARENT] = NULL
+    hv[H_ROOT] = root
+    # 4. free lists: records referenced by live leaves are live
+    t._free_nodes = np.nonzero(~live[:int(hv[H_FRESH_NODES])])[0].tolist()
+    rec_live = t._live_record_mask(leaves)
+    t._free_recs = np.nonzero(
+        ~rec_live[:int(hv[H_FRESH_RECS])])[0].tolist()
+    return {"mode": "partly", "count": int(hv[H_COUNT]),
+            "leaves": int(leaves.size)}

@@ -29,7 +29,9 @@ from typing import Optional, Tuple
 
 import numpy as np
 
+from repro.core import reconstruct as rec
 from repro.core.arena import Arena, FlushStats
+from repro.core.recovery import chain_order
 
 NULL = -1
 DATA_WORDS = 7
@@ -186,7 +188,7 @@ class DoublyLinkedList:
         while pending:
             arr = np.fromiter(pending, np.int64)
             pred = self.prev[arr]
-            ready = np.array([p not in pending for p in pred.tolist()])
+            ready = ~np.isin(pred, arr)
             batch = arr[ready]
             if batch.size == 0:  # adjacent chain; peel one end
                 batch = arr[:1]
@@ -238,76 +240,76 @@ class DoublyLinkedList:
 
     # ------------- traversal / verification -------------
     def to_list(self) -> np.ndarray:
-        """Materialize list order by walking NEXT (volatile)."""
-        out = np.empty(self.count, np.int64)
-        cur = self.head
-        for i in range(self.count):
-            out[i] = cur
-            cur = int(self.nodes.vol[cur, DATA_WORDS])
-        return out
+        """Materialize list order from NEXT (vectorized binary lifting —
+        the shared chain_order primitive, not a scalar walk)."""
+        return chain_order(self.next, self.head, self.count)
+
+    def order(self) -> np.ndarray:
+        """List order materialized from the volatile ring (no chain
+        traversal at all): appends push at the back, pops consume the
+        front, deletes punch NULL holes — the surviving window IS the
+        list order.  Recovery consumers (the paged-KV allocator) read
+        this right after reconstruction."""
+        window = self._ring[self._r0:self._r1]
+        return window[window != NULL].copy()
 
     # ------------- crash / reconstruction -------------
     def reconstruct(self) -> None:
         """Rebuild all volatile redundancy from persistent fields only
-        (paper §IV-C3, vectorized via binary lifting)."""
+        (paper §IV-C3).  Thin shim over the registered pure reconstructor
+        — recovery paths route through core.recovery.RecoveryManager,
+        which loads the regions once and times the stage."""
         self.header.load()
         self.nodes.load()
-        hv = self.header.vol[0]
-        if hv[H_FLAG] != 1:
-            # Flag bit unset: nothing was ever flushed — recover as empty
-            # (the paper's "safely initialized" check, §IV-C3).
-            hv[:] = 0
-            hv[H_HEAD] = NULL
-            hv[H_TAIL] = NULL
-        count = int(hv[H_COUNT])
-        head = int(hv[H_HEAD])
-        self.prev = np.full(self.capacity, NULL, np.int64)
-        if count == 0:
-            hv[H_TAIL] = NULL
-            hv[H_FRESH] = 0
-            self._free = []
-            self._r0 = self._r1 = 0
-            return
-        order = order_from_next(self.next, head, count)
-        self.prev[order[1:]] = order[:-1]
-        hv[H_TAIL] = order[-1]
-        live = np.zeros(self.capacity, bool)
-        live[order] = True
-        # Fresh-water mark: everything at/above the max live id is fresh.
-        fresh = int(order.max()) + 1
-        hv[H_FRESH] = fresh
-        free = np.nonzero(~live[:fresh])[0]
-        self._free = free.tolist()
-        self._ring = np.empty(self.capacity * 2, np.int64)
-        self._ring[:count] = order
-        self._r0, self._r1 = 0, count
-        if self.mode == "full":
-            self.nodes.vol[order[1:], DATA_WORDS + 1] = order[:-1]
-            self.nodes.vol[order[0], DATA_WORDS + 1] = NULL
+        rec.get("pstruct.dll")(self)
 
     def flush_stats(self) -> FlushStats:
         return self.arena.stats
 
 
-def order_from_next(nxt: np.ndarray, head: int, count: int) -> np.ndarray:
-    """node-at-position for positions 0..count-1 via binary lifting.
-
-    O(N log N) work, fully vectorized — the parallel analogue of the
-    paper's sequential NEXT walk."""
+@rec.register("pstruct.dll")
+def _reconstruct_dll(d: "DoublyLinkedList") -> dict:
+    """Pure rebuild of the DLL's volatile redundancy from its (already
+    loaded) persistent fields: PREV by one scatter off the vectorized
+    chain order, TAIL = last, free slots = complement, order ring =
+    chain order (paper §IV-C3, parallelized per §V-F)."""
+    hv = d.header.vol[0]
+    if hv[H_FLAG] != 1:
+        # Flag bit unset: nothing was ever flushed — recover as empty
+        # (the paper's "safely initialized" check, §IV-C3).
+        hv[:] = 0
+        hv[H_HEAD] = NULL
+        hv[H_TAIL] = NULL
+    count = int(hv[H_COUNT])
+    head = int(hv[H_HEAD])
+    d.prev = np.full(d.capacity, NULL, np.int64)
     if count == 0:
-        return np.empty(0, np.int64)
-    n = nxt.shape[0]
-    bits = max(1, int(np.ceil(np.log2(max(count, 2)))))
-    jump = np.empty((bits, n), np.int64)
-    jump[0] = nxt
-    for k in range(1, bits):
-        prev_j = jump[k - 1]
-        safe = np.where(prev_j >= 0, prev_j, 0)
-        jump[k] = np.where(prev_j >= 0, prev_j[safe], NULL)
-    pos = np.arange(count)
-    cur = np.full(count, head, np.int64)
-    for k in range(bits):
-        m = (pos >> k) & 1 == 1
-        if m.any():
-            cur[m] = jump[k][cur[m]]
-    return cur
+        hv[H_TAIL] = NULL
+        hv[H_FRESH] = 0
+        d._free = []
+        d._r0 = d._r1 = 0
+        return {"mode": d.mode, "count": 0}
+    # The committed COUNT bounds the walk: rows appended by a torn epoch
+    # (data flushed, header not) stay unreachable.
+    order = chain_order(d.next, head, count)
+    d.prev[order[1:]] = order[:-1]
+    hv[H_TAIL] = order[-1]
+    live = np.zeros(d.capacity, bool)
+    live[order] = True
+    # Fresh-water mark: everything at/above the max live id is fresh.
+    fresh = int(order.max()) + 1
+    hv[H_FRESH] = fresh
+    free = np.nonzero(~live[:fresh])[0]
+    d._free = free.tolist()
+    d._ring = np.empty(d.capacity * 2, np.int64)
+    d._ring[:count] = order
+    d._r0, d._r1 = 0, count
+    if d.mode == "full":
+        d.nodes.vol[order[1:], DATA_WORDS + 1] = order[:-1]
+        d.nodes.vol[order[0], DATA_WORDS + 1] = NULL
+    return {"mode": d.mode, "count": count}
+
+
+def order_from_next(nxt: np.ndarray, head: int, count: int) -> np.ndarray:
+    """Back-compat alias for the shared primitive (core.recovery)."""
+    return chain_order(nxt, head, count)

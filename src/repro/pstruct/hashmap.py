@@ -28,7 +28,9 @@ from typing import Optional, Tuple
 
 import numpy as np
 
+from repro.core import reconstruct as rec
 from repro.core.arena import Arena, FlushStats
+from repro.core.recovery import chain_walk
 
 NULL = -1
 KEY_NULL = np.int64(-(2 ** 62))  # tombstone / empty key sentinel
@@ -184,21 +186,18 @@ class Hashmap:
         self.chain[ids_s[:-1]] = np.where(~grp_start[1:], ids_s[1:], NULL)
         self.chain[ids_s[-1]] = NULL
         heads = ids_s[grp_start]
-        new_bucket_heads = []
-        for t, hd, bb in zip(tails.tolist(), heads.tolist(),
-                             bs[grp_start].tolist()):
-            if t == NULL:
-                self.buckets[bb] = hd
-                new_bucket_heads.append(bb)
-            else:
-                self.chain[t] = hd
+        # tail linking, one scatter per case: empty buckets adopt the
+        # group head; occupied buckets chain it after their tail
+        empty = tails == NULL
+        self.buckets[bs[grp_start][empty]] = heads[empty]
+        self.chain[tails[~empty]] = heads[~empty]
         if self.mode == "full":
             self.entries.vol[ids_s, 9] = self.chain[ids_s]
-            link_dirty = tails[tails != NULL]
+            link_dirty = tails[~empty]
             if link_dirty.size:
                 self.entries.vol[link_dirty, 9] = self.chain[link_dirty]
                 self.entries.mark_rows(link_dirty)
-            self._persist_buckets(np.asarray(new_bucket_heads, np.int64))
+            self._persist_buckets(bs[grp_start][empty])
 
     def _chain_tails(self, bkts: np.ndarray) -> np.ndarray:
         cur = self.buckets[bkts]
@@ -236,33 +235,46 @@ class Hashmap:
         return ok
 
     def _unlink(self, slots: np.ndarray) -> None:
-        sset = set(slots.tolist())
+        """Remove `slots` from their bucket chains, all buckets in
+        parallel: materialize the affected chains with the shared
+        chain_walk primitive, mask out the removed members, and relink
+        the survivors (order preserved) with two scatters."""
         hs = self.hashes[slots]
         bkts = np.unique((hs & np.uint64(self.n_buckets - 1)).astype(np.int64))
-        dirty = []
-        head_dirty = []
-        for bb in bkts.tolist():
-            prev = NULL
-            cur = int(self.buckets[bb])
-            while cur != NULL:
-                nxt = int(self.chain[cur])
-                if cur in sset:
-                    if prev == NULL:
-                        self.buckets[bb] = nxt
-                        head_dirty.append(bb)
-                    else:
-                        self.chain[prev] = nxt
-                        if self.mode == "full":
-                            self.entries.vol[prev, 9] = nxt
-                            dirty.append(prev)
-                    self.chain[cur] = NULL
-                else:
-                    prev = cur
-                cur = nxt
+        members = chain_walk(self.chain, self.buckets[bkts])
+        if members.shape[1] == 0:
+            self.chain[slots] = NULL
+            return
+        valid = members != NULL
+        keep = valid & ~np.isin(members, slots)
+        # compact survivors left (stable: chain order preserved)
+        comp = np.take_along_axis(
+            members, np.argsort(~keep, axis=1, kind="stable"), axis=1)
+        cnt = keep.sum(1)
+        old_heads = self.buckets[bkts]
+        new_heads = np.where(cnt > 0, comp[:, 0], NULL)
+        self.buckets[bkts] = new_heads
+        # relink: comp[b, j] -> comp[b, j+1] for j+1 < cnt, last -> NULL
+        chain_dirty = []
+        if comp.shape[1] > 1:
+            m = (np.arange(comp.shape[1] - 1)[None, :] + 1) < cnt[:, None]
+            src, dst = comp[:, :-1][m], comp[:, 1:][m]
+            changed = self.chain[src] != dst
+            self.chain[src] = dst
+            chain_dirty.append(src[changed])
+        nz = np.nonzero(cnt > 0)[0]
+        last = comp[nz, cnt[nz] - 1]
+        last_changed = self.chain[last] != NULL
+        self.chain[last] = NULL
+        chain_dirty.append(last[last_changed])
+        self.chain[slots] = NULL
         if self.mode == "full":
-            if dirty:
-                self.entries.mark_rows(np.asarray(dirty, np.int64))
-            self._persist_buckets(np.asarray(head_dirty, np.int64))
+            dirty = np.unique(np.concatenate(chain_dirty)) \
+                if chain_dirty else np.empty(0, np.int64)
+            if dirty.size:
+                self.entries.vol[dirty, 9] = self.chain[dirty]
+                self.entries.mark_rows(dirty)
+            self._persist_buckets(bkts[new_heads != old_heads])
 
     def _grow(self) -> None:
         if self.n_buckets >= self.n_buckets_max:
@@ -300,23 +312,12 @@ class Hashmap:
 
     # -------- crash / reconstruction --------
     def reconstruct(self) -> None:
-        """Paper §IV-E3: SIZE + dense (KEY, VALUE) rows -> full hashmap."""
+        """Thin shim over the registered pure reconstructor — recovery
+        paths route through core.recovery.RecoveryManager, which loads
+        the regions once and times the stage."""
         self.header.load()
         self.entries.load()
-        hv = self.header.vol[0]
-        if hv[H_FLAG] != 1:
-            # uninitialized image recovers as an empty map (§IV-E3 validity
-            # check on struct Hashmap)
-            hv[:] = 0
-        fresh = int(hv[H_FRESH])
-        live = self.keys[:fresh] != KEY_NULL
-        # SIZE -> derive bucket count (paper derives BUCKETCOUNT from SIZE)
-        size = int(hv[H_SIZE])
-        self.n_buckets = _next_pow2(max(16, int(size / self.load_factor) + 1))
-        self.hashes = np.zeros(self.capacity, np.uint64)
-        idx = np.nonzero(live)[0]
-        self.hashes[idx] = hash64(self.keys[idx])
-        self._rebuild_chains()
+        rec.get("pstruct.hashmap")(self)
 
     def check_against(self, ref: dict) -> bool:
         ks = np.fromiter(ref.keys(), np.int64, len(ref))
@@ -328,6 +329,29 @@ class Hashmap:
 
     def flush_stats(self) -> FlushStats:
         return self.arena.stats
+
+
+@rec.register("pstruct.hashmap")
+def _reconstruct_hashmap(h: "Hashmap") -> dict:
+    """Pure rebuild (paper §IV-E3): SIZE + dense (KEY, VALUE) rows ->
+    full hashmap.  Scan the slab rows [0, fresh) in one vectorized pass,
+    drop NULL keys, recompute hashes, re-derive the bucket count from
+    SIZE and the load factor, and rebuild chains in slab order."""
+    hv = h.header.vol[0]
+    if hv[H_FLAG] != 1:
+        # uninitialized image recovers as an empty map (§IV-E3 validity
+        # check on struct Hashmap)
+        hv[:] = 0
+    fresh = int(hv[H_FRESH])
+    live = h.keys[:fresh] != KEY_NULL
+    # SIZE -> derive bucket count (paper derives BUCKETCOUNT from SIZE)
+    size = int(hv[H_SIZE])
+    h.n_buckets = _next_pow2(max(16, int(size / h.load_factor) + 1))
+    h.hashes = np.zeros(h.capacity, np.uint64)
+    idx = np.nonzero(live)[0]
+    h.hashes[idx] = hash64(h.keys[idx])
+    h._rebuild_chains()
+    return {"mode": h.mode, "size": size, "live": int(idx.size)}
 
 
 def _next_pow2(x: int) -> int:

@@ -23,8 +23,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import reconstruct as rec
 from repro.core.arena import open_arena
+from repro.core.recovery import RecoveryManager, RecoveryReport
 from repro.models.model import Model
+from repro.pstruct.hashmap import H_FRESH as HM_FRESH
 from repro.pstruct.hashmap import Hashmap
 from repro.serve.kvcache import PagedAllocator, PagedConfig
 
@@ -63,6 +66,7 @@ class ServingEngine:
         self._decode = jax.jit(model.decode_step)
         self._prefill = jax.jit(lambda p, b: model.prefill(
             p, b, s_max=cfg.s_max))
+        self.last_recovery: Optional[RecoveryReport] = None
 
     # ------------------------------------------------------------------
     def _free_slot(self) -> int:
@@ -90,21 +94,31 @@ class ServingEngine:
         return slot
 
     def _prefill_slot(self, slot: int, tokens: np.ndarray) -> None:
-        batch = {"tokens": jnp.asarray(tokens, jnp.int32)[None]}
+        self._prefill_slots(np.asarray([slot], np.int64),
+                            np.asarray(tokens)[None])
+
+    def _prefill_slots(self, slots: np.ndarray, tokens: np.ndarray) -> None:
+        """Prefill a group of slots sharing one prompt length with a
+        single batched model call (tokens: (g, plen)), then scatter the
+        (g, ...) cache rows into their slots with one indexed device
+        update per cache leaf — the grouped re-prefill unit of the
+        batched recovery path."""
+        g = len(slots)
+        batch = {"tokens": jnp.asarray(tokens, jnp.int32)}
         if self.model.cfg.family == "audio":
             batch["frames"] = jnp.zeros(
-                (1, self.model.cfg.encoder_seq, self.model.cfg.d_model),
+                (g, self.model.cfg.encoder_seq, self.model.cfg.d_model),
                 self.model.compute_dtype)
         if self.model.cfg.family == "vlm":
             batch["context"] = jnp.zeros(
-                (1, self.model.cfg.context_seq, self.model.cfg.d_model),
+                (g, self.model.cfg.context_seq, self.model.cfg.d_model),
                 self.model.compute_dtype)
         _, kv = self._prefill(self.params, batch)
-        # write the (B=1) cache into this slot of the batched cache
+        idx = jnp.asarray(slots, jnp.int32)
         self.cache = _map_slot(
             self.cache, kv,
-            lambda full, one, ax: jax.lax.dynamic_update_slice_in_dim(
-                full, one.astype(full.dtype), slot, axis=ax))
+            lambda full, grp, ax: _scatter_batch(
+                full, grp.astype(full.dtype), idx, ax))
 
     def step(self) -> Dict[int, int]:
         """One greedy decode step for every active slot.  Returns
@@ -164,36 +178,56 @@ class ServingEngine:
         self.arena.crash()
 
     def recover(self) -> float:
-        """Paper-style recovery: reload essential regions, reconstruct the
-        hashmap + LRU, re-prefill every active request's token log."""
-        import time
-        t0 = time.perf_counter()
-        self.arena.reopen()
-        self.table.reconstruct()
-        self.paging.recover()
-        self.cache = self.model.init_cache(self.cfg.max_batch,
-                                           self.cfg.s_max)
-        self.pos = np.zeros(self.cfg.max_batch, np.int64)
-        self.slot_rid = np.full(self.cfg.max_batch, -1, np.int64)
-        # enumerate live requests from the dense entry slab
-        fresh = int(self.table.header.vol[0, 2])
-        for e in range(fresh):
-            rid = int(self.table.keys[e])
-            if rid == np.iinfo(np.int64).min or rid < 0:
-                continue
-            from repro.pstruct.hashmap import KEY_NULL
-            if self.table.keys[e] == KEY_NULL:
-                continue
-            val = self.table.values[e]
-            if val[V_ACTIVE] != 1:
-                continue
-            slot = int(val[V_SLOT])
-            tlen = int(val[V_TLEN])
-            toks = np.array(self.tok_region.vol[slot, :tlen], np.int32)
-            self._prefill_slot(slot, toks)
-            self.slot_rid[slot] = rid
-            self.pos[slot] = tlen
-        return time.perf_counter() - t0
+        """Paper-style recovery through the unified manager: reopen the
+        arenas once, then reconstruct in dependency order — request
+        hashmap, LRU chain, page tables, engine slots (batched slab scan
+        + grouped re-prefill).  Returns seconds; the staged
+        RecoveryReport lands in ``last_recovery``."""
+        mgr = RecoveryManager(self.arena, self.paging.arena)
+        mgr.add("req_table", "pstruct.hashmap", self.table)
+        mgr.add("lru", "pstruct.dll", self.paging.lru)
+        mgr.add("pages", "serve.paged_alloc", self.paging,
+                depends=("lru",))
+        mgr.add("engine", "serve.engine", self,
+                depends=("req_table", "pages"))
+        report = mgr.recover()
+        self.last_recovery = report
+        return report.total_seconds
+
+
+@rec.register("serve.engine")
+def _reconstruct_engine(eng: "ServingEngine") -> dict:
+    """Pure rebuild of the engine's DERIVABLE state from the recovered
+    request table: one vectorized scan over the dense entry slab (no
+    per-entry Python loop), then one grouped re-prefill pass — slots
+    sharing a prompt length share a single batched prefill call."""
+    cfg = eng.cfg
+    eng.cache = eng.model.init_cache(cfg.max_batch, cfg.s_max)
+    eng.pos = np.zeros(cfg.max_batch, np.int64)
+    eng.slot_rid = np.full(cfg.max_batch, -1, np.int64)
+    fresh = int(eng.table.header.vol[0, HM_FRESH])
+    keys = eng.table.keys[:fresh]
+    vals = eng.table.values[:fresh]
+    # valid rids are non-negative; KEY_NULL tombstones are negative too,
+    # so one sign check covers both
+    live = (keys >= 0) & (vals[:, V_ACTIVE] == 1)
+    slots = vals[live, V_SLOT]
+    tlens = vals[live, V_TLEN]
+    eng.slot_rid[slots] = keys[live]
+    eng.pos[slots] = tlens
+    groups = np.unique(tlens)
+    for tl in groups.tolist():
+        sel = slots[tlens == tl]
+        eng._prefill_slots(sel, np.array(eng.tok_region.vol[sel, :tl],
+                                         np.int32))
+    return {"requests": int(live.sum()), "prefill_groups": int(groups.size)}
+
+
+def _scatter_batch(full, grp, idx, ax):
+    """full.at[slots].set(rows) along the structural batch axis."""
+    if ax == 0:
+        return full.at[idx].set(grp)
+    return full.at[:, idx].set(grp)
 
 
 def _map_slot(full_tree, other_tree, fn):

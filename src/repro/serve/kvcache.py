@@ -18,7 +18,9 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro.core import reconstruct as rec
 from repro.core.arena import Arena, open_arena
+from repro.core.recovery import RecoveryManager, RecoveryReport
 from repro.pstruct.dll import NULL, DoublyLinkedList
 
 
@@ -42,6 +44,7 @@ class PagedAllocator:
         self.page_of_node: Dict[int, int] = {}
         self.pages_free: List[int] = list(range(cfg.n_pages))
         self.owner: np.ndarray = np.full(cfg.n_pages, -1, np.int64)
+        self.last_recovery: Optional[RecoveryReport] = None
 
     def alloc(self, request_id: int, n: int) -> np.ndarray:
         """Allocate n pages to a request (LRU-evicting if exhausted).
@@ -93,20 +96,28 @@ class PagedAllocator:
     # ------------- crash recovery -------------
     def recover(self) -> float:
         """Rebuild all volatile metadata from the persistent NEXT chain +
-        node payloads (paper §IV-C3).  Returns seconds."""
-        import time
-        t0 = time.perf_counter()
-        self.lru.reconstruct()
-        order = self.lru.to_list()
-        self.page_of_node = {}
-        self.owner = np.full(self.cfg.n_pages, -1, np.int64)
-        used = set()
-        for nd in order.tolist():
-            pg = int(self.lru.data[nd, 0])
-            rid = int(self.lru.data[nd, 1])
-            self.page_of_node[nd] = pg
-            self.owner[pg] = rid
-            used.add(pg)
-        self.pages_free = [p for p in range(self.cfg.n_pages)
-                           if p not in used]
-        return time.perf_counter() - t0
+        node payloads (paper §IV-C3), through the unified recovery
+        manager: LRU chain first, page tables second.  Returns seconds
+        (the full RecoveryReport lands in ``last_recovery``)."""
+        mgr = RecoveryManager(self.arena)
+        mgr.add("lru", "pstruct.dll", self.lru)
+        mgr.add("pages", "serve.paged_alloc", self, depends=("lru",))
+        report = mgr.recover()
+        self.last_recovery = report
+        return report.total_seconds
+
+
+@rec.register("serve.paged_alloc")
+def _reconstruct_paged_alloc(pa: PagedAllocator) -> dict:
+    """Pure rebuild of owner/page_of_node/pages_free from the
+    reconstructed LRU — one vectorized pass over the node payloads
+    instead of the per-node Python loop + `p not in used` scan."""
+    order = pa.lru.order()          # materialized by the DLL reconstructor
+    pages = pa.lru.data[order, 0]
+    pa.page_of_node = dict(zip(order.tolist(), pages.tolist()))
+    pa.owner = np.full(pa.cfg.n_pages, -1, np.int64)
+    pa.owner[pages] = pa.lru.data[order, 1]
+    free = ~np.isin(np.arange(pa.cfg.n_pages), pages)
+    pa.pages_free = np.nonzero(free)[0].tolist()
+    return {"pages_live": int(pages.size),
+            "pages_free": int(pa.cfg.n_pages - pages.size)}

@@ -7,7 +7,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels import hash_probe, ops, pack_flush, quant_pack, ref
+from repro.kernels import (chain_order, hash_probe, ops, pack_flush,
+                           quant_pack, ref)
 
 KEY = jax.random.PRNGKey(0)
 
@@ -115,6 +116,55 @@ def test_hash_lookup_end_to_end():
                           jnp.array([100, 149, 999], jnp.int32))
     g = np.asarray(got)
     assert g[0] >= 0 and g[1] >= 0 and g[2] == -1
+
+
+# ----------------------------------------------------- chain order (§V-F)
+
+@pytest.mark.parametrize("n", [8, 61, 256])
+def test_jump_double_matches_ref(n):
+    rng = np.random.default_rng(5)
+    perm = rng.permutation(n)
+    nxt = np.full(n, -1, np.int32)
+    nxt[perm[:-1]] = perm[1:]
+    jump = jnp.asarray(nxt)
+    cnt = jnp.ones(n, jnp.int32)
+    for _ in range(3):   # stays an oracle match through several rounds
+        gj, gc = chain_order.jump_double(jump, cnt, interpret=True)
+        wj, wc = ref.jump_double_ref(jump, cnt)
+        np.testing.assert_array_equal(np.asarray(gj), np.asarray(wj))
+        np.testing.assert_array_equal(np.asarray(gc), np.asarray(wc))
+        jump, cnt = gj, gc
+
+
+def test_chain_order_device_matches_numpy_primitive():
+    from repro.core.recovery import chain_order as chain_order_np
+    rng = np.random.default_rng(6)
+    n = 128
+    perm = rng.permutation(n)
+    live = perm[:97]                       # chain covers a strict subset
+    nxt = np.full(n, -1, np.int64)
+    nxt[live[:-1]] = live[1:]
+    head = int(live[0])
+    got = chain_order.chain_order_device(nxt, head, interpret=True)
+    want = chain_order_np(nxt, head)
+    np.testing.assert_array_equal(got, want)
+    np.testing.assert_array_equal(got, live)
+
+
+def test_chain_order_device_detects_cycle():
+    nxt = np.array([1, 2, 0, -1], np.int64)
+    with pytest.raises(RuntimeError, match="cycle"):
+        chain_order.chain_order_device(nxt, 0, interpret=True)
+
+
+def test_chain_order_device_treats_oob_pointer_as_terminator():
+    """Torn-epoch contract parity with the numpy primitive: a pointer
+    flushed past the committed fresh-water mark ends the chain."""
+    from repro.core.recovery import chain_order as chain_order_np
+    nxt = np.array([1, 8, -1, -1], np.int64)     # 8 is out of range (n=4)
+    got = chain_order.chain_order_device(nxt, 0, interpret=True)
+    np.testing.assert_array_equal(got, [0, 1])
+    np.testing.assert_array_equal(got, chain_order_np(nxt, 0))
 
 
 # ------------------------------------------------------- flash attention
