@@ -15,7 +15,13 @@ The paper's discipline, end to end:
   every DERIVABLE leaf (rng, pipeline cursor, schedule) via
   core.reconstruct, re-warm dropped moments, and device_put with the
   *target* mesh's shardings — restoring onto a different mesh (elastic
-  scaling) is the same code path.
+  scaling) is the same code path.  ``restore(warmup="background")``
+  takes APPROXIMABLE re-warming off the restore critical path: the
+  returned state carries cheap host placeholders for dropped moments
+  while a background thread materializes the device arrays;
+  ``finish_warmup(state)`` joins and swaps them in, and the warmup time
+  lands in the RecoveryReport as its own §V-F-style stage
+  ("warmup_approximable") next to the reconstruction times.
 * incremental mode (beyond paper): leaves whose content digest is unchanged
   since the previous checkpoint are skipped ("don't persist what didn't
   change") — frozen embeddings/stubs cost zero bytes per step.
@@ -78,6 +84,10 @@ class CheckpointManager:
         # restore() reports through the same per-stage format as every
         # other recovery path (core.recovery.RecoveryReport)
         self.last_recovery: Optional[RecoveryReport] = None
+        # background APPROXIMABLE warmup (restore(warmup="background"))
+        self._warmer: Optional[threading.Thread] = None
+        self._warm_result: Dict[int, Any] = {}
+        self._warm_error: Optional[BaseException] = None
 
     # ------------------------------------------------------------------ save
     def save(self, state: TrainState, blocking: bool = True) -> SaveReport:
@@ -173,12 +183,29 @@ class CheckpointManager:
         return os.path.exists(os.path.join(self.dir, "manifest.json"))
 
     def restore(self, state_spec: TrainState,
-                shardings: Optional[PyTree] = None) -> TrainState:
+                shardings: Optional[PyTree] = None,
+                warmup: str = "inline") -> TrainState:
         """state_spec: a TrainState of ShapeDtypeStructs (or arrays) giving
         the target structure; shardings: matching NamedSharding pytree (or
         None for single-device).  DERIVABLE leaves are reconstructed, not
-        read."""
+        read.
+
+        warmup: "inline" re-warms APPROXIMABLE leaves on the restore
+        critical path (the seed behavior); "background" returns host
+        placeholders for them immediately and materializes the device
+        arrays in a background thread — call ``finish_warmup(state)`` to
+        join and swap them in.  The warmup stage is timed into the
+        report either way (detail ``background=True`` marks the
+        off-critical-path variant)."""
+        assert warmup in ("inline", "background")
         self.wait()
+        self.wait_warmup()
+        if self._warm_result:
+            # splicing THIS restore's indices into a state produced by a
+            # previous one would corrupt it silently — refuse loudly
+            raise RuntimeError(
+                "unclaimed background warmup from a previous restore — "
+                "call finish_warmup(state) on that state first")
         t_all = time.perf_counter()
         report = RecoveryReport()
         t0 = time.perf_counter()
@@ -205,7 +232,8 @@ class CheckpointManager:
         times = {"load_persisted": 0.0, "reconstruct_derivable": 0.0,
                  "rewarm_approximable": 0.0, "device_put": 0.0}
         counts = {k: 0 for k in times}
-        for (pth, spec), shard in zip(flat, sflat):
+        deferred: Dict[int, Tuple[Tuple[int, ...], Any, Any]] = {}
+        for i, ((pth, spec), shard) in enumerate(zip(flat, sflat)):
             pstr = pol.path_str(pth)
             kind = pol.classify(pth, self.policy.rules)
             ent = manifest["leaves"].get(pstr)
@@ -223,6 +251,14 @@ class CheckpointManager:
                 # cleanly because update() corrects with the global step)
                 arr = np.zeros(shape, dtype)
                 stage = "rewarm_approximable"
+                if warmup == "background":
+                    # hand back the host placeholder now; the device
+                    # array materializes off the critical path
+                    deferred[i] = (shape, dtype, shard)
+                    times[stage] += time.perf_counter() - t0
+                    counts[stage] += 1
+                    out.append(arr)
+                    continue
             else:
                 raise KeyError(f"essential leaf {pstr} missing from checkpoint")
             times[stage] += time.perf_counter() - t0
@@ -236,11 +272,66 @@ class CheckpointManager:
             counts["device_put"] += 1
             out.append(arr)
         for stage, secs in times.items():
-            report.add(stage, secs, leaves=counts[stage])
+            report.add(stage, secs, leaves=counts[stage],
+                       background=(stage == "rewarm_approximable"
+                                   and warmup == "background"))
         report.total_seconds = time.perf_counter() - t_all
         self.last_recovery = report
+        if deferred:
+            self._start_warmup(report, deferred, t_all)
         sd_new = jax.tree.unflatten(treedef, out)
         return TrainState(**sd_new)
+
+    # ------------------------------------------- background warmup stage
+    def _start_warmup(self, report: RecoveryReport,
+                      deferred: Dict[int, Tuple], t_anchor: float) -> None:
+        self._warm_result = {}
+        self._warm_error = None
+
+        def warm():
+            try:
+                t0 = time.perf_counter()
+                warmed: Dict[int, Any] = {}
+                for idx, (shape, dtype, shard) in deferred.items():
+                    arr = np.zeros(shape, dtype)
+                    warmed[idx] = (jax.device_put(arr, shard)
+                                   if shard is not None
+                                   else jnp.asarray(arr))
+                secs = time.perf_counter() - t0
+                st = report.add("warmup_approximable", secs,
+                                leaves=len(warmed), background=True)
+                st.t_start = t0 - t_anchor
+                st.t_end = st.t_start + secs
+                self._warm_result = warmed
+            except BaseException as e:   # surfaced by wait_warmup()
+                self._warm_error = e
+
+        self._warmer = threading.Thread(target=warm, daemon=True)
+        self._warmer.start()
+
+    def wait_warmup(self) -> None:
+        """Join the background warmup thread; a failure inside it (a
+        device_put OOM, a sharding mismatch) re-raises HERE rather than
+        dying silently in the daemon thread."""
+        if self._warmer is not None:
+            self._warmer.join()
+            self._warmer = None
+        err, self._warm_error = self._warm_error, None
+        if err is not None:
+            raise err
+
+    def finish_warmup(self, state: TrainState) -> TrainState:
+        """Join the background warmup thread and swap the warmed device
+        arrays into the restored state (leaf order matches restore's
+        flatten order).  A no-op for inline restores."""
+        self.wait_warmup()
+        if not self._warm_result:
+            return state
+        leaves, treedef = jax.tree_util.tree_flatten(state.as_dict())
+        for idx, arr in self._warm_result.items():
+            leaves[idx] = arr
+        self._warm_result = {}
+        return TrainState(**jax.tree_util.tree_unflatten(treedef, leaves))
 
     def _load_leaf(self, entry: dict, shape, dtype) -> np.ndarray:
         with np.load(os.path.join(self.dir, entry["file"])) as z:

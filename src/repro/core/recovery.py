@@ -20,15 +20,29 @@ paged-KV allocator, the checkpoint manager) routes through it:
   topological order, and times each stage into a ``RecoveryReport`` —
   the §V-F reconstruction-time metric, measured per stage.
 
+``recover(concurrency=N)`` runs independent stages of the same
+topological level in a thread pool: recovery wall time approaches the
+critical path over the dependency DAG instead of the serial stage sum
+(the report carries all three — ``wall_ms`` / ``critical_path_ms`` /
+``total_ms``).  Stage-completion callbacks (``recover(on_stage=...)``
+or ``add_listener``) fire the moment a stage lands, which is how the
+serving engine admits traffic per slot before the full report exists
+(DESIGN.md §6, "Concurrent recovery & admission").
+
 Reconstructors must be pure given the loaded persistent state: same
 bytes => identical rebuilt volatile redundancy, which the torn-epoch
-crash tests assert at every epoch boundary (tests/test_recovery.py).
+crash tests assert at every epoch boundary (tests/test_recovery.py)
+and the crash-point fuzzer re-asserts through recover-crash-recover
+double failures (tests/test_async_recovery.py) — purity is exactly
+what makes a crash *during* recovery harmless.
 """
 from __future__ import annotations
 
+import threading
 import time
+from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -112,10 +126,14 @@ def chain_order(nxt: np.ndarray, head: int,
     an explicit count (the DLL header) pass it instead — a
     stale-but-committed count then bounds the walk to the committed
     prefix, which is exactly the torn-epoch recovery guarantee.
-    O(N log N) work, fully vectorized."""
-    if head == NULL:
-        return np.empty(0, np.int64)
+    O(N log N) work, fully vectorized.
+
+    A head outside [0, n) — NULL, or a HEAD field flushed by a torn
+    epoch past the committed fresh-water mark — is a terminated chain:
+    empty order, per the module-wide OOB-pointer contract."""
     n = nxt.shape[0]
+    if head < 0 or head >= n:
+        return np.empty(0, np.int64)
     if count is None:
         # build tables deep enough to absorb any valid chain, then read
         # the length off them: descend from the top bit, taking every
@@ -183,24 +201,57 @@ def chain_walk(nxt: np.ndarray, heads: np.ndarray) -> np.ndarray:
 
 @dataclass
 class StageReport:
-    """One timed rebuild stage (§V-F reconstruction-time row)."""
+    """One timed rebuild stage (§V-F reconstruction-time row).
+
+    ``t_start`` / ``t_end`` are wall-clock offsets (seconds) from the
+    start of the recovery pass, so a concurrent recovery's timeline can
+    be read off the report: overlapping [t_start, t_end) intervals are
+    stages that ran in parallel."""
     name: str
     seconds: float
     detail: Dict[str, Any] = field(default_factory=dict)
+    t_start: float = 0.0
+    t_end: float = 0.0
 
     def as_dict(self) -> Dict[str, Any]:
-        return {"name": self.name, "seconds": self.seconds, **self.detail}
+        return {"name": self.name, "seconds": self.seconds,
+                "t_start": self.t_start, "t_end": self.t_end,
+                **self.detail}
 
 
 @dataclass
 class RecoveryReport:
     """Per-stage timing + validity of one recovery pass.  Produced by
     RecoveryManager and by ckpt.CheckpointManager.restore — the one
-    report format every recovery path shares."""
+    report format every recovery path shares.
+
+    Three times tell the concurrency story:
+
+    * ``total_ms``         — summed per-stage seconds (serial work);
+    * ``critical_path_ms`` — longest dependency chain (the floor any
+      concurrency can reach);
+    * ``wall_ms``          — what this pass actually took.
+
+    ``total_seconds`` remains the wall-clock duration of the pass
+    (``wall_ms / 1000``) for existing call sites."""
     valid: bool = True
     generation: int = 0
     total_seconds: float = 0.0
+    concurrency: int = 1
+    critical_path_seconds: float = 0.0
     stages: List[StageReport] = field(default_factory=list)
+
+    @property
+    def wall_ms(self) -> float:
+        return self.total_seconds * 1e3
+
+    @property
+    def total_ms(self) -> float:
+        return sum(s.seconds for s in self.stages) * 1e3
+
+    @property
+    def critical_path_ms(self) -> float:
+        return self.critical_path_seconds * 1e3
 
     def add(self, name: str, seconds: float, **detail: Any) -> "StageReport":
         st = StageReport(name, seconds, dict(detail))
@@ -220,6 +271,9 @@ class RecoveryReport:
     def as_dict(self) -> Dict[str, Any]:
         return {"valid": self.valid, "generation": self.generation,
                 "total_seconds": self.total_seconds,
+                "concurrency": self.concurrency,
+                "wall_ms": self.wall_ms, "total_ms": self.total_ms,
+                "critical_path_ms": self.critical_path_ms,
                 "stages": [s.as_dict() for s in self.stages]}
 
 
@@ -251,11 +305,17 @@ class RecoveryManager:
     ``recover()`` reopens every arena once (the generation/validity check
     happens here, not in each structure), then runs the registered pure
     reconstructors in topological order, timing each into the report.
+    ``recover(concurrency=N)`` runs the independent stages of each
+    topological level in a thread pool of N workers; the report's stage
+    list stays in deterministic (level-major, registration) order no
+    matter which thread finished first, so serial and concurrent passes
+    produce equivalent reports modulo timing fields.
     """
 
     def __init__(self, *arenas: Any):
         self.arenas = [a for a in arenas if a is not None]
         self._items: Dict[str, Recoverable] = {}
+        self._listeners: List[Callable[[StageReport], None]] = []
 
     # ------------------------------------------------------------- setup
     def add(self, name: str, reconstructor: str, target: Any,
@@ -268,9 +328,20 @@ class RecoveryManager:
                                         tuple(depends))
         return self
 
-    def order(self) -> List[str]:
-        """Topological order over declared dependencies, stable in
-        registration order among ready items."""
+    def add_listener(self, fn: Callable[[StageReport], None]
+                     ) -> "RecoveryManager":
+        """Register a stage-completion callback: ``fn(stage_report)`` is
+        invoked the moment each stage (including "reopen") lands — from
+        the completing worker thread under ``recover(concurrency>1)``,
+        serialized by the manager's lock either way."""
+        self._listeners.append(fn)
+        return self
+
+    def levels(self) -> List[List[str]]:
+        """Topological *levels* over declared dependencies: level k holds
+        every item whose dependencies all sit in levels < k, stable in
+        registration order within a level.  Items of one level are
+        mutually independent — the unit of stage concurrency."""
         items = self._items
         for it in items.values():
             for dep in it.depends:
@@ -279,40 +350,95 @@ class RecoveryManager:
                         f"recoverable {it.name!r} depends on unregistered "
                         f"{dep!r}")
         done: set = set()
-        out: List[str] = []
+        out: List[List[str]] = []
         pending = list(items)
         while pending:
             ready = [n for n in pending
                      if all(d in done for d in items[n].depends)]
             if not ready:
                 raise ValueError(f"dependency cycle among {pending}")
-            out.extend(ready)
+            out.append(ready)
             done.update(ready)
             pending = [n for n in pending if n not in done]
         return out
 
+    def order(self) -> List[str]:
+        """Topological order over declared dependencies, stable in
+        registration order among ready items (levels, flattened)."""
+        return [n for level in self.levels() for n in level]
+
     # ----------------------------------------------------------- recover
-    def recover(self, reopen: bool = True) -> RecoveryReport:
+    def recover(self, reopen: bool = True, concurrency: int = 1,
+                on_stage: Optional[Callable[[StageReport], None]] = None
+                ) -> RecoveryReport:
         t_all = time.perf_counter()
-        report = RecoveryReport()
+        report = RecoveryReport(concurrency=max(1, int(concurrency)))
+        lock = threading.Lock()
+        listeners = list(self._listeners)
+        if on_stage is not None:
+            listeners.append(on_stage)
+
+        def emit(st: StageReport) -> None:
+            with lock:
+                for fn in listeners:
+                    fn(st)
+
+        reopen_secs = 0.0
         if reopen and self.arenas:
             t0 = time.perf_counter()
             valids = []
             for a in self.arenas:
                 a.reopen()
                 valids.append(bool(a.header_valid()))
-            report.add("reopen", time.perf_counter() - t0,
-                       arenas=len(self.arenas), valid=valids)
+            reopen_secs = time.perf_counter() - t0
+            st = report.add("reopen", reopen_secs,
+                            arenas=len(self.arenas), valid=valids)
+            st.t_start, st.t_end = 0.0, reopen_secs
             report.valid = all(valids)
             # the committed (persisted) generation — survives recovery in
             # a fresh process, unlike the in-memory commit counter
             report.generation = max(a.header_generation()
                                     for a in self.arenas)
-        for name in self.order():
+            emit(st)
+
+        def run_stage(name: str) -> StageReport:
             it = self._items[name]
+            t0 = time.perf_counter()
             out, secs = reconstruct.run(it.reconstructor, it.target)
+            t1 = time.perf_counter()
             detail = dict(out) if isinstance(out, dict) else {}
             detail.setdefault("reconstructor", it.reconstructor)
-            report.add(name, secs, **detail)
+            st = StageReport(name, secs, detail,
+                             t_start=t0 - t_all, t_end=t1 - t_all)
+            emit(st)
+            return st
+
+        for level in self.levels():
+            if report.concurrency > 1 and len(level) > 1:
+                # independent stages of one level: fan out, then barrier —
+                # the next level's dependencies are all of this one
+                with ThreadPoolExecutor(
+                        max_workers=min(report.concurrency,
+                                        len(level))) as ex:
+                    futs = [ex.submit(run_stage, n) for n in level]
+                # .result() re-raises the first stage failure; report
+                # order is submission (registration) order, not
+                # completion order — determinism over luck
+                report.stages.extend(f.result() for f in futs)
+            else:
+                report.stages.extend(run_stage(n) for n in level)
         report.total_seconds = time.perf_counter() - t_all
+        report.critical_path_seconds = reopen_secs + self._critical_path(
+            {s.name: s.seconds for s in report.stages})
         return report
+
+    def _critical_path(self, secs: Dict[str, float]) -> float:
+        """Longest dependency-chain sum of stage times — the wall-time
+        floor of an infinitely concurrent recovery (excludes reopen,
+        which is inherently serial and added by the caller)."""
+        memo: Dict[str, float] = {}
+        for name in self.order():        # deps resolve before dependents
+            it = self._items[name]
+            memo[name] = secs.get(name, 0.0) + max(
+                (memo[d] for d in it.depends), default=0.0)
+        return max(memo.values(), default=0.0)

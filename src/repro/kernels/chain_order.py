@@ -79,7 +79,13 @@ def chain_tables_device(nxt: np.ndarray, bits: int, *,
                         ) -> Tuple[List[np.ndarray], np.ndarray]:
     """Binary-lifting tables via the kernel: returns ([jump^(2^k) for
     k < bits], counts) with counts[i] = min(2^bits, chain length from i)."""
-    jump = jnp.asarray(nxt, jnp.int32)
+    # sanitize at full width BEFORE the int32 narrowing: a torn 64-bit
+    # pointer like 2**32+3 would otherwise wrap to a valid-looking 3
+    # instead of terminating the chain (the module-wide OOB contract)
+    nxt = np.asarray(nxt)
+    n = nxt.shape[0]
+    jump = jnp.asarray(np.where((nxt >= 0) & (nxt < n), nxt, NULL),
+                       jnp.int32)
     cnt = jnp.ones(nxt.shape[0], jnp.int32)
     tables = [np.asarray(jump, np.int64)]
     for _ in range(bits - 1):
@@ -94,10 +100,12 @@ def chain_order_device(nxt: np.ndarray, head: int, *,
                        interpret: bool = True) -> np.ndarray:
     """Full device-built chain order: the doubling rounds run in the
     Pallas kernel; the final node-at-position extraction is a cheap
-    O(count log count) gather off the returned tables."""
-    if head == NULL:
-        return np.empty(0, np.int64)
+    O(count log count) gather off the returned tables.  A head outside
+    [0, n) is a terminated chain (empty order) — the same OOB contract
+    as the host primitive."""
     n = nxt.shape[0]
+    if head < 0 or head >= n:
+        return np.empty(0, np.int64)
     bits = max(1, int(n).bit_length())
     tables, cnt = chain_tables_device(nxt, bits, interpret=interpret)
     count = int(cnt[head])

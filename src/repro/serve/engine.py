@@ -13,11 +13,22 @@ The decode path runs a jit'd `decode_step` over fixed batch slots
 documented simplification, DESIGN.md §3).  Greedy sampling keeps recovery
 bit-checkable: tokens generated after recovery must equal an uninterrupted
 run, which tests/test_serving.py asserts.
+
+Early traffic admission (DESIGN.md §6): the engine holds a per-slot
+readiness bitmap (`slot_ready`).  A crash clears it; recovery re-admits
+each slot the moment its grouped re-prefill lands — `step()` decodes
+ready slots and skips the rest, and `add_request` only seats new work on
+ready slots — so serving resumes at the first admitted group instead of
+barriering on the full RecoveryReport.  `on_slot_ready` callbacks fire
+per admitted group (slots, prompt length, seconds since recovery start).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Tuple
+import threading
+import time
+from concurrent.futures import ThreadPoolExecutor
+from typing import Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -63,6 +74,17 @@ class ServingEngine:
         self.cache = model.init_cache(cfg.max_batch, cfg.s_max)
         self.pos = np.zeros(cfg.max_batch, np.int64)       # per-slot length
         self.slot_rid = np.full(cfg.max_batch, -1, np.int64)
+        # slot-granular admission: all ready in steady state; a crash
+        # clears the bitmap and recovery re-admits per prefill group
+        self.slot_ready = np.ones(cfg.max_batch, bool)
+        self.on_slot_ready: Optional[Callable[[np.ndarray, int, float],
+                                              None]] = None
+        self._cache_lock = threading.Lock()
+        # admission events serialize (like manager stage listeners), so
+        # check-then-act callbacks stay race-free under pooled prefill;
+        # distinct from _cache_lock so a callback may decode (step())
+        self._admit_lock = threading.Lock()
+        self._recover_concurrency = 1
         self._decode = jax.jit(model.decode_step)
         self._prefill = jax.jit(lambda p, b: model.prefill(
             p, b, s_max=cfg.s_max))
@@ -71,7 +93,7 @@ class ServingEngine:
     # ------------------------------------------------------------------
     def _free_slot(self) -> int:
         for i in range(self.cfg.max_batch):
-            if self.slot_rid[i] < 0:
+            if self.slot_rid[i] < 0 and self.slot_ready[i]:
                 return i
         raise RuntimeError("no free slots")
 
@@ -115,10 +137,14 @@ class ServingEngine:
                 self.model.compute_dtype)
         _, kv = self._prefill(self.params, batch)
         idx = jnp.asarray(slots, jnp.int32)
-        self.cache = _map_slot(
-            self.cache, kv,
-            lambda full, grp, ax: _scatter_batch(
-                full, grp.astype(full.dtype), idx, ax))
+        # the model call above runs lock-free (groups prefill in
+        # parallel under recover(concurrency>1)); the read-modify-write
+        # scatter of the shared cache tree serializes
+        with self._cache_lock:
+            self.cache = _map_slot(
+                self.cache, kv,
+                lambda full, grp, ax: _scatter_batch(
+                    full, grp.astype(full.dtype), idx, ax))
 
     def step(self) -> Dict[int, int]:
         """One greedy decode step for every active slot.  Returns
@@ -132,13 +158,13 @@ class ServingEngine:
         with self.arena.epoch():
             for slot in range(self.cfg.max_batch):
                 rid = int(self.slot_rid[slot])
-                if rid < 0:
+                if rid < 0 or not self.slot_ready[slot]:
                     continue
                 p = int(self.pos[slot])
                 if p >= self.cfg.s_max:
                     continue
                 last_tok = int(self.tok_region.vol[slot, p - 1])
-                logits, self.cache = self._decode_slot(slot, last_tok, p)
+                logits = self._decode_slot(slot, last_tok, p)
                 tok = int(np.asarray(jnp.argmax(logits)))
                 # ESSENTIAL: append the generated token + bump lengths
                 self.tok_region.vol[slot, p] = tok
@@ -154,7 +180,13 @@ class ServingEngine:
         return out
 
     def _decode_slot(self, slot: int, token: int, p: int):
-        # extract the slot's cache, run decode at B=1, re-seat it
+        # extract the slot's cache, run decode at B=1, re-seat it.  A
+        # ready slot is never a re-prefill target, so the extracted rows
+        # cannot change underneath the decode — but the re-seat is a
+        # read-modify-write of the SHARED cache tree, which must not
+        # lose a sibling prefill group's scatter during early-admission
+        # decoding (step() inside an on_slot_ready callback while
+        # recovery is still prefilling other slots)
         one = _map_slot(
             self.cache, self.cache,
             lambda full, _, ax: jax.lax.dynamic_slice_in_dim(
@@ -162,27 +194,38 @@ class ServingEngine:
         logits, one2 = self._decode(self.params, one,
                                     jnp.asarray([token], jnp.int32),
                                     jnp.asarray(p, jnp.int32))
-        cache = _map_slot(
-            self.cache, one2,
-            lambda full, o, ax: jax.lax.dynamic_update_slice_in_dim(
-                full, o.astype(full.dtype), slot, axis=ax))
-        self.cache = cache
-        return logits[0], cache
+        # the cache updates ONLY here, inside the lock — returning it for
+        # reassignment at the call site would re-introduce the lost-update
+        # window this lock closes
+        with self._cache_lock:
+            self.cache = _map_slot(
+                self.cache, one2,
+                lambda full, o, ax: jax.lax.dynamic_update_slice_in_dim(
+                    full, o.astype(full.dtype), slot, axis=ax))
+        return logits[0]
 
     # ------------------------------------------------------------------
     def crash(self) -> None:
-        """Drop ALL device + volatile host state."""
+        """Drop ALL device + volatile host state.  No slot is ready to
+        serve until recovery re-admits it."""
         self.cache = None
         self.pos = None
         self.slot_rid = None
+        self.slot_ready = np.zeros(self.cfg.max_batch, bool)
         self.arena.crash()
 
-    def recover(self) -> float:
+    def recover(self, concurrency: int = 1,
+                on_stage=None) -> float:
         """Paper-style recovery through the unified manager: reopen the
         arenas once, then reconstruct in dependency order — request
-        hashmap, LRU chain, page tables, engine slots (batched slab scan
-        + grouped re-prefill).  Returns seconds; the staged
-        RecoveryReport lands in ``last_recovery``."""
+        hashmap + LRU chain (independent: one topological level), page
+        tables, engine slots (batched slab scan + grouped re-prefill).
+        ``concurrency>1`` runs independent stages AND the engine's
+        prefill groups in thread pools, and slots are re-admitted
+        (``slot_ready``) group by group as their prefill lands.
+        Returns seconds; the staged RecoveryReport lands in
+        ``last_recovery``."""
+        self._recover_concurrency = max(1, int(concurrency))
         mgr = RecoveryManager(self.arena, self.paging.arena)
         mgr.add("req_table", "pstruct.hashmap", self.table)
         mgr.add("lru", "pstruct.dll", self.paging.lru)
@@ -190,7 +233,7 @@ class ServingEngine:
                 depends=("lru",))
         mgr.add("engine", "serve.engine", self,
                 depends=("req_table", "pages"))
-        report = mgr.recover()
+        report = mgr.recover(concurrency=concurrency, on_stage=on_stage)
         self.last_recovery = report
         return report.total_seconds
 
@@ -199,9 +242,16 @@ class ServingEngine:
 def _reconstruct_engine(eng: "ServingEngine") -> dict:
     """Pure rebuild of the engine's DERIVABLE state from the recovered
     request table: one vectorized scan over the dense entry slab (no
-    per-entry Python loop), then one grouped re-prefill pass — slots
-    sharing a prompt length share a single batched prefill call."""
+    per-entry Python loop), then grouped re-prefill — slots sharing a
+    prompt length share a single batched prefill call.  Each group's
+    slots are re-admitted (``slot_ready``) the moment its prefill lands,
+    and ``on_slot_ready`` fires with the admission offset — empty slots
+    admit right after the scan, so new requests need not wait for old
+    ones to re-prefill.  Groups run in a thread pool when the engine is
+    recovering with ``concurrency>1`` (model calls parallel, cache
+    scatter serialized by the cache lock)."""
     cfg = eng.cfg
+    t0 = time.perf_counter()
     eng.cache = eng.model.init_cache(cfg.max_batch, cfg.s_max)
     eng.pos = np.zeros(cfg.max_batch, np.int64)
     eng.slot_rid = np.full(cfg.max_batch, -1, np.int64)
@@ -215,12 +265,38 @@ def _reconstruct_engine(eng: "ServingEngine") -> dict:
     tlens = vals[live, V_TLEN]
     eng.slot_rid[slots] = keys[live]
     eng.pos[slots] = tlens
+    # admit everything the scan proved empty; occupied slots stay gated
+    # until their group's prefill lands
+    ready = np.ones(cfg.max_batch, bool)
+    ready[slots] = False
+    eng.slot_ready = ready
     groups = np.unique(tlens)
-    for tl in groups.tolist():
+
+    def prefill_group(tl: int) -> float:
         sel = slots[tlens == tl]
         eng._prefill_slots(sel, np.array(eng.tok_region.vol[sel, :tl],
                                          np.int32))
-    return {"requests": int(live.sum()), "prefill_groups": int(groups.size)}
+        with eng._admit_lock:
+            eng.slot_ready[sel] = True
+            admitted = time.perf_counter() - t0
+            cb = eng.on_slot_ready
+            if cb is not None:
+                cb(sel, int(tl), admitted)
+        return admitted
+
+    conc = max(1, int(eng._recover_concurrency))
+    if conc > 1 and groups.size > 1:
+        with ThreadPoolExecutor(
+                max_workers=min(conc, int(groups.size))) as ex:
+            admissions = list(ex.map(prefill_group, groups.tolist()))
+    else:
+        admissions = [prefill_group(tl) for tl in groups.tolist()]
+    return {"requests": int(live.sum()),
+            "prefill_groups": int(groups.size),
+            "first_admission_s": round(min(admissions), 6)
+            if admissions else 0.0,
+            "last_admission_s": round(max(admissions), 6)
+            if admissions else 0.0}
 
 
 def _scatter_batch(full, grp, idx, ax):

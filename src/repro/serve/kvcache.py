@@ -94,15 +94,19 @@ class PagedAllocator:
         return np.nonzero(self.owner == request_id)[0]
 
     # ------------- crash recovery -------------
-    def recover(self) -> float:
+    def recover(self, concurrency: int = 1, on_stage=None) -> float:
         """Rebuild all volatile metadata from the persistent NEXT chain +
         node payloads (paper §IV-C3), through the unified recovery
-        manager: LRU chain first, page tables second.  Returns seconds
-        (the full RecoveryReport lands in ``last_recovery``)."""
+        manager: LRU chain first, page tables second (a strict dependency
+        chain, so ``concurrency`` only matters when this allocator's
+        stages share a manager with other recoverables — the serving
+        engine's recover() composes them that way).  Stage-completion
+        callbacks pass through to the manager.  Returns seconds (the
+        full RecoveryReport lands in ``last_recovery``)."""
         mgr = RecoveryManager(self.arena)
         mgr.add("lru", "pstruct.dll", self.lru)
         mgr.add("pages", "serve.paged_alloc", self, depends=("lru",))
-        report = mgr.recover()
+        report = mgr.recover(concurrency=concurrency, on_stage=on_stage)
         self.last_recovery = report
         return report.total_seconds
 

@@ -167,6 +167,81 @@ def test_chain_order_device_treats_oob_pointer_as_terminator():
     np.testing.assert_array_equal(got, chain_order_np(nxt, 0))
 
 
+# --------------------------------------- chain primitive edge cases
+
+
+def test_chain_empty_chain_everywhere():
+    """NULL head / empty table: every primitive returns empty, never
+    indexes."""
+    from repro.core import recovery as R
+    nxt = np.full(4, -1, np.int64)
+    assert R.chain_order(nxt, R.NULL).size == 0
+    assert R.chain_order(nxt, R.NULL, 0).size == 0
+    assert chain_order.chain_order_device(nxt, -1, interpret=True).size == 0
+    empty = np.empty(0, np.int64)
+    assert R.chain_lengths(empty, empty).size == 0
+    assert R.chain_walk(nxt, empty).shape == (0, 0)
+
+
+def test_chain_single_node():
+    from repro.core import recovery as R
+    nxt = np.array([-1], np.int64)
+    np.testing.assert_array_equal(R.chain_order(nxt, 0), [0])
+    np.testing.assert_array_equal(R.chain_order(nxt, 0, 1), [0])
+    np.testing.assert_array_equal(
+        chain_order.chain_order_device(nxt, 0, interpret=True), [0])
+    np.testing.assert_array_equal(R.chain_lengths(nxt, np.array([0])), [1])
+    np.testing.assert_array_equal(R.chain_walk(nxt, np.array([0])),
+                                  [[0]])
+
+
+def test_chain_self_loop_guard():
+    """A self-loop (nxt[i] == i, the smallest cycle) must fail loudly in
+    every primitive, host and device."""
+    from repro.core import recovery as R
+    nxt = np.array([-1, 1, -1], np.int64)        # node 1 points at itself
+    with pytest.raises(RuntimeError, match="cycle"):
+        R.chain_order(nxt, 1)
+    with pytest.raises(RuntimeError, match="cycle"):
+        R.chain_lengths(nxt, np.array([1]))
+    with pytest.raises(RuntimeError, match="cycle"):
+        R.chain_walk(nxt, np.array([1]))
+    with pytest.raises(RuntimeError, match="cycle"):
+        chain_order.chain_order_device(nxt, 1, interpret=True)
+
+
+@pytest.mark.parametrize("bad", [2 ** 31 - 1, 2 ** 31, 2 ** 31 + 5,
+                                 2 ** 32 + 3, -(2 ** 31)])
+def test_chain_int32_overflow_adjacent_pointers_terminate(bad):
+    """Torn 64-bit pointers adjacent to the int32 boundary must behave
+    as terminators, not wrap through the int32 working arrays into
+    valid-looking node ids (2**32+3 would alias node 3)."""
+    from repro.core import recovery as R
+    nxt = np.array([1, 2, bad, -1, -1], np.int64)   # 0 -> 1 -> 2 -> X
+    np.testing.assert_array_equal(R.chain_order(nxt, 0), [0, 1, 2])
+    np.testing.assert_array_equal(
+        chain_order.chain_order_device(nxt, 0, interpret=True), [0, 1, 2])
+    np.testing.assert_array_equal(R.chain_lengths(nxt, np.array([0])), [3])
+    np.testing.assert_array_equal(
+        R.chain_walk(nxt, np.array([0], np.int64))[0], [0, 1, 2])
+    # an overflow-adjacent HEAD is an already-terminated chain
+    assert R.chain_lengths(nxt, np.array([bad]))[0] == 0
+
+
+def test_chain_order_oob_head_is_empty():
+    """Heads outside [0, n): the DLL header's HEAD field flushed by a
+    torn epoch into uncommitted territory — empty chain, not a fault,
+    in all four primitives (host + device)."""
+    from repro.core import recovery as R
+    nxt = np.array([1, -1], np.int64)
+    for head in (5, 2 ** 31, 2 ** 40):
+        assert R.chain_walk(nxt, np.array([head], np.int64))[0].size \
+            == R.chain_lengths(nxt, np.array([head]))[0] == 0
+        assert R.chain_order(nxt, head).size == 0
+        assert chain_order.chain_order_device(
+            nxt, head, interpret=True).size == 0
+
+
 # ------------------------------------------------------- flash attention
 
 @pytest.mark.parametrize("h,sq,skv,d,bq,bk,causal", [

@@ -4,7 +4,10 @@ point.  The system invariant under test is the paper's central claim:
 
     reconstruct(persist(partly)) == live state == reconstruct(persist(full))
 
-and flush accounting: lines(partly) <= lines(full) for the same op trace.
+and flush accounting: lines(partly) <= lines(full) for the same op trace;
+plus the recovery-subsystem property: an interleaved multi-structure
+workload crashed at a RANDOM point recovers — serially or concurrently —
+to exactly the committed prefix of the op sequence.
 """
 import numpy as np
 import pytest
@@ -14,6 +17,7 @@ from hypothesis import HealthCheck, given, settings  # noqa: E402
 from hypothesis import strategies as st  # noqa: E402
 
 from repro.core.arena import open_arena
+from repro.core.recovery import RecoveryManager
 from repro.pstruct.bptree import BPTree
 from repro.pstruct.dll import DoublyLinkedList
 from repro.pstruct.hashmap import Hashmap
@@ -144,6 +148,103 @@ def test_dll_matches_list(ops):
             # prev chain is the exact mirror of next
             assert d.prev[order[0]] == -1
             assert (d.prev[order[1:]] == order[:-1]).all()
+
+
+# ------------------------------------------- interleaved crash point
+
+mixed_ops = st.lists(
+    st.tuples(st.sampled_from(["dll", "bt", "hm"]), st.integers(1, 6)),
+    min_size=2, max_size=12)
+
+
+@given(ops=mixed_ops, frac=st.floats(0.0, 1.0),
+       concurrency=st.sampled_from([1, 4]))
+@settings(**SETTINGS)
+def test_interleaved_crash_point_recovers_committed_prefix(
+        ops, frac, concurrency):
+    """Random interleaved DLL/B+Tree/Hashmap ops over fresh keys, one
+    commit per op; a crash lands inside the op AFTER a randomly chosen
+    boundary (power loss: nothing of the torn epoch flushed).  Recovery
+    through the manager — at the drawn concurrency — must rebuild
+    exactly the committed prefix for all three structures."""
+    layout = {}
+    layout.update(DoublyLinkedList.layout(128, "partly", name="dll"))
+    layout.update(BPTree.layout(128, 512, "partly", name="bt"))
+    layout.update(Hashmap.layout(256, "partly", name="hm"))
+    a = open_arena(None, layout)
+    d = DoublyLinkedList(a, 128, "partly", name="dll")
+    t = BPTree(a, 128, 512, "partly", name="bt")
+    h = Hashmap(a, 256, "partly", name="hm")
+
+    boundary = min(int(frac * len(ops)), len(ops) - 1)
+    key = 0
+    dll_ref, bt_ref, hm_ref = [], {}, {}
+    crashed_mid_op = False
+    for i, (kind, m) in enumerate(ops):
+        vals = (np.arange(m * 7, dtype=np.int64).reshape(m, 7)
+                + 1000 * key)
+        keys = np.arange(key, key + m, dtype=np.int64)
+        key += m
+        if i <= boundary:
+            if kind == "dll":
+                d.append_batch(vals)
+                dll_ref.extend(vals.tolist())
+            elif kind == "bt":
+                t.insert_batch(keys, vals)
+                bt_ref.update(zip(keys.tolist(), vals))
+            else:
+                h.insert_batch(keys, vals)
+                hm_ref.update(zip(keys.tolist(), vals))
+            a.commit()
+        else:
+            # the torn op: applied but never flushed nor committed
+            with a.epoch():
+                if kind == "dll":
+                    d.append_batch(vals)
+                elif kind == "bt":
+                    t.insert_batch(keys, vals)
+                else:
+                    h.insert_batch(keys, vals)
+                a.crash()
+            crashed_mid_op = True
+            break
+    if not crashed_mid_op:
+        a.crash()
+
+    mgr = RecoveryManager(a)
+    mgr.add("dll", "pstruct.dll", d)
+    mgr.add("bt", "pstruct.bptree", t)
+    mgr.add("hm", "pstruct.hashmap", h)
+    report = mgr.recover(concurrency=concurrency)
+    assert report.valid
+    assert report.generation == boundary + 1
+
+    # committed prefix, exactly
+    assert d.count == len(dll_ref)
+    if dll_ref:
+        order = d.to_list()
+        assert d.data[order].tolist() == dll_ref
+    t.check_invariants()
+    if bt_ref:
+        ks = np.fromiter(bt_ref.keys(), np.int64, len(bt_ref))
+        ok, got = t.find_batch(ks)
+        assert ok.all()
+        assert (got == np.stack([bt_ref[int(k)] for k in ks])).all()
+    assert h.size == len(hm_ref)
+    if hm_ref:
+        ks = np.fromiter(hm_ref.keys(), np.int64, len(hm_ref))
+        ok, got = h.find_batch(ks)
+        assert ok.all()
+        assert (got == np.stack([hm_ref[int(k)] for k in ks])).all()
+    # torn keys must NOT surface (power-loss flavor: nothing flushed)
+    if crashed_mid_op:
+        torn = np.arange(key - ops[boundary + 1][1], key, dtype=np.int64)
+        if ops[boundary + 1][0] == "bt":
+            ok, _ = t.find_batch(torn)
+            assert not ok.any()
+        elif ops[boundary + 1][0] == "hm":
+            ok, _ = h.find_batch(torn)
+            assert not ok.any()
 
 
 # ---------------------------------------------------------------- arena
