@@ -17,6 +17,16 @@ paper's workloads, at three batching granularities:
   serving pattern: kvcache.alloc spans evict+append+commit).
   ``save_vs_per_op`` compares against the measured per_op row.
 
+The ``n_shards`` sweep (DESIGN.md §7) measures FLUSH-EPOCH THROUGHPUT
+of the sharded arena on the same mixed B+Tree workload: ops accumulate
+marks in the epoch (untimed — structure CPU is not the flush path),
+then the timed section is exactly the epoch drain + commit.  The sweep
+runs in the stall-dominated regime (synthetic per-line latency at 4x
+the 250 ns base so the flush stall stays above this host's timer
+wakeup slack): a single arena pays the whole stall serially, N shards
+pay 1/N each, overlapped in the flush pool — the medium-independent
+line/dedup accounting is asserted IDENTICAL across shard counts.
+
 Emits BENCH_flush.json next to the repo root (CI artifact).
 
 Run: ``PYTHONPATH=src python -m benchmarks.flush_batching [--quick]``
@@ -25,13 +35,17 @@ from __future__ import annotations
 
 import argparse
 import json
+import time
 from typing import Dict, List
 
 import numpy as np
 
 from benchmarks.common import make_structure
+from repro.core.arena import open_arena
+from repro.pstruct.bptree import BPTree
 
 GROUP = 8  # ops fused per outer epoch in the per_group variant
+SHARD_COUNTS = (1, 2, 4, 8)
 
 
 def _bptree_mixed(n_init: int, n_ops: int, batch: int, group: int,
@@ -107,6 +121,84 @@ def _dll_delete(n_init: int, n_ops: int, batch: int, seed: int = 0) -> Dict:
             "per_call_lines": dd.lines + dd.saved_lines}
 
 
+def _sharded_flush(n_shards: int, n_init: int, n_ops: int, batch: int,
+                   group: int, synth_ns: float, seed: int = 0) -> Dict:
+    """Mixed 1:1 insert/delete B+Tree on an ``n_shards`` arena; returns
+    the flush-phase wall (epoch drains + commits only) and the exact
+    line accounting.  ``n_shards=1`` is the plain single Arena — the
+    pre-sharding baseline, spin-exact stalls and all."""
+    rng = np.random.default_rng(seed)
+    capacity = n_init + n_ops + 1024
+    layout = BPTree.layout(max(64, capacity // 4), capacity, "partly")
+    a = open_arena(None, layout, n_shards=n_shards,
+                   synth_line_ns=synth_ns)
+    t = BPTree(a, max(64, capacity // 4), capacity, "partly")
+    keyspace = rng.permutation(capacity * 2).astype(np.int64)
+    init_keys = keyspace[:n_init]
+    new_keys = keyspace[n_init:n_init + n_ops]
+    vals = rng.integers(0, 1 << 40, (max(n_init, n_ops), 7)).astype(np.int64)
+    for i in range(0, n_init, 4096):
+        t.insert_batch(init_keys[i:i + 4096], vals[i:i + 4096])
+    a.commit()
+    base = a.stats.snapshot()
+    ops = []
+    done = ins = rm = 0
+    while done < n_ops:
+        m = min(batch, n_ops - done)
+        ops.append(("ins", new_keys[ins:ins + m], vals[:m]))
+        ins += m
+        done += m
+        if done >= n_ops:
+            break
+        m = min(batch, n_ops - done)
+        ops.append(("del", init_keys[rm:rm + m], None))
+        rm += m
+        done += m
+    flush_wall = 0.0
+    for g in range(0, len(ops), group):
+        # marks accumulate inside the epoch untimed (structure CPU is
+        # not the flush path); the timed section is the drain + commit
+        a._epoch_depth += 1
+        _apply(t, ops[g:g + group])
+        a._epoch_depth -= 1
+        t0 = time.perf_counter()
+        a.writeset.flush()
+        a.commit()
+        flush_wall += time.perf_counter() - t0
+    d = a.stats.delta(base)
+    a.close()    # release the shard pool + memmap handles per sweep point
+    return {"n_shards": n_shards, "flush_wall_s": round(flush_wall, 6),
+            "lines": d.lines, "saved_lines": d.saved_lines,
+            "dedup_rows": d.dedup_rows, "epochs": d.epochs,
+            "lines_per_s": int(d.lines / max(flush_wall, 1e-9))}
+
+
+def sharded_sweep(n_init: int, n_ops: int, batch: int = 256,
+                  group: int = 32, synth_ns: float = 1000.0,
+                  repeats: int = 2) -> List[Dict]:
+    """Flush-epoch throughput vs shard count, interleaved best-of-N (the
+    noise filter every bench here uses on this shared host).
+
+    ``synth_ns`` scales the per-line stall so stall-per-epoch lands in
+    the several-ms range where this host's sleep wakeup slack (~1 ms)
+    cannot mask the overlap; the line counts stay exact at any scale."""
+    best: Dict[int, Dict] = {}
+    for _ in range(repeats):
+        for ns in SHARD_COUNTS:
+            r = _sharded_flush(ns, n_init, n_ops, batch, group, synth_ns)
+            if ns not in best or r["flush_wall_s"] < best[ns]["flush_wall_s"]:
+                best[ns] = r
+    rows = [best[ns] for ns in SHARD_COUNTS]
+    base = rows[0]
+    for r in rows:
+        r["x_vs_1shard"] = round(base["flush_wall_s"]
+                                 / max(r["flush_wall_s"], 1e-9), 2)
+        # the medium-independent accounting must not depend on sharding
+        assert (r["lines"], r["saved_lines"], r["dedup_rows"]) == \
+            (base["lines"], base["saved_lines"], base["dedup_rows"]), rows
+    return rows
+
+
 def run(n_init: int = 20000, n_ops: int = 20000,
         batch: int = 64) -> List[Dict]:
     rows = []
@@ -147,15 +239,39 @@ def main() -> int:
     cols = ["grouping", "per_call_lines", "lines", "saved_lines",
             "save_vs_per_op", "save_vs_per_call", "dedup_rows", "epochs"]
     print(fmt_table(rows, cols))
+
+    # quick mode shrinks the op count, so it raises the per-line stall
+    # to keep stall-per-epoch in the slack-dominating range
+    synth_ns = 4000.0 if args.quick else 1000.0
+    if args.quick:
+        shard_rows = sharded_sweep(4000, 8192, batch=256, group=16,
+                                   synth_ns=synth_ns, repeats=2)
+    else:
+        shard_rows = sharded_sweep(n_init, 32768, batch=256, group=32,
+                                   synth_ns=synth_ns, repeats=2)
+    print(fmt_table(shard_rows, ["n_shards", "flush_wall_s", "lines",
+                                 "lines_per_s", "x_vs_1shard", "epochs"]))
+
     with open(args.out, "w") as f:
         json.dump({"workload": "bptree mixed 1:1 insert/delete",
-                   "n_init": n_init, "n_ops": n_ops, "rows": rows}, f,
-                  indent=1)
+                   "n_init": n_init, "n_ops": n_ops, "rows": rows,
+                   "sharded_sweep": {
+                       "workload": "bptree mixed 1:1, flush-phase wall "
+                                   "(epoch drain + commit), stall-"
+                                   "dominated regime",
+                       "synth_line_ns": synth_ns,
+                       "rows": shard_rows}}, f, indent=1)
     print(f"-> {args.out}")
     # epoch batching must never regress per-call accounting, and the
     # grouped B+Tree mixed workload + DLL deletes must beat it outright
     assert all(r["lines"] <= r["per_call_lines"] for r in rows), rows
     assert any(r["lines"] < r["per_call_lines"] for r in rows), rows
+    # sharded flush throughput: never below the single-arena baseline
+    # (the CI regression gate), and >= 1.3x at 4 shards in full mode
+    x4 = next(r["x_vs_1shard"] for r in shard_rows if r["n_shards"] == 4)
+    assert x4 >= 1.0, shard_rows
+    if not args.quick:
+        assert x4 >= 1.3, shard_rows
     return 0
 
 

@@ -27,6 +27,18 @@ CPU host is the real memcpy+write cost, which scales linearly in flushed
 bytes (reproducing Fig 1's linearity).  An optional synthetic per-line
 latency models Optane-like flush stalls for experiments that want the
 paper's regime explicitly.
+
+``ShardedArena`` (DESIGN.md §7) partitions the substrate into N
+independent shards — each a full ``Arena`` with its own backing file,
+write set, flush stats, and data-before-metadata commit header — behind
+the SAME region/epoch/commit API, so every structure runs unchanged on
+any shard count.  A ``ShardedRegion`` keeps ONE full-shape volatile
+array (structures index it with global row ids exactly as before) while
+its persistent bytes are split across shards by a pure row->shard
+router (block-cyclic segments, hashed rows, or contiguous ranges).  A
+tiny manifest commits LAST: the cross-shard generation is the one ALL
+shards agree on, so a crash between shard commits recovers the previous
+manifest generation.
 """
 from __future__ import annotations
 
@@ -35,19 +47,23 @@ import dataclasses
 import json
 import os
 import struct
+import threading
 import time
+from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass, field
-from typing import Dict, Optional, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
-from repro.core.writeset import WriteSet
+from repro.core.writeset import ShardedWriteSet, WriteSet
 
 LINE = 64                 # flush granularity (bytes) — paper's cache line
 MEDIA_GRAIN = 256         # DCPMM internal granularity (§IV-D bucket sizing)
 
 _MAGIC = b"RPRA"
 _HDR_FMT = "<4sQQ?7x"     # magic, n_regions, generation, valid flag
+_MAN_MAGIC = b"RPRM"
+_MAN_FMT = "<4sQQ?7x"     # magic, n_shards, generation, valid flag
 
 
 @dataclass
@@ -97,6 +113,19 @@ class Region:
                              count=self.nbytes, offset=self.offset)
         return flat.view(self.dtype).reshape(self.shape)
 
+    def _gather(self, rows: np.ndarray) -> np.ndarray:
+        """Volatile source rows for a flush — overridden by shard slices,
+        whose volatile state lives in the parent ShardedRegion."""
+        return self.vol[rows]
+
+    def _gather_range(self, lo: int, hi: int) -> np.ndarray:
+        return self.vol[lo:hi]
+
+    def _pack_source(self, rows: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+        """(full volatile array, row ids into it) for the pack_flush
+        kernel gather path."""
+        return self.vol, rows
+
     def persist_rows(self, rows: np.ndarray) -> None:
         """Flush the given row indices (volatile -> persistent) NOW, with
         per-call line accounting.  Structure code should prefer
@@ -106,7 +135,7 @@ class Region:
             return
         rows = np.unique(rows)
         pv = self._pview()
-        pv[rows] = self.vol[rows]
+        pv[rows] = self._gather(rows)
         self.arena._account_rows(self.offset, self.rowbytes, rows)
 
     def mark_rows(self, rows: np.ndarray) -> None:
@@ -127,7 +156,7 @@ class Region:
         if hi <= lo:
             return
         pv = self._pview()
-        pv[lo:hi] = self.vol[lo:hi]
+        pv[lo:hi] = self._gather_range(lo, hi)
         self.arena._account_range(self.offset + lo * self.rowbytes,
                                   (hi - lo) * self.rowbytes)
 
@@ -135,8 +164,11 @@ class Region:
         self.persist_range(0, self.shape[0])
 
     def load(self) -> None:
-        """Reload volatile copy from persistent memory (post-crash)."""
+        """Reload volatile copy from persistent memory (post-crash).
+        Pays the synthetic media read latency when the arena models one
+        — the recovery-side mirror of the flush stall."""
         self.vol = np.array(self._pview())
+        self.arena.synth_read(self.nbytes)
 
 
 class Arena:
@@ -151,6 +183,17 @@ class Arena:
         # >0: epoch flushes of at least this many rows gather through the
         # Pallas pack_flush kernel (tile-aligned staging buffer).
         self.pack_flush_rows = pack_flush_rows
+        # Sharded parents set this: synthetic flush stalls then sleep
+        # (GIL-released — stalls of sibling shards overlap in the flush
+        # pool) instead of spinning.  A lone arena always spins: exact,
+        # and nothing could overlap with it anyway.
+        self.synth_sleep = False
+        self._defer = False
+        self._defer_ns = 0
+        # concurrent per-region load stages may synth_read the same
+        # shard from several scheduler threads; the fence accumulator is
+        # the one counter they share
+        self._fence_lock = threading.Lock()
         self.writeset = WriteSet(self)
         self._epoch_depth = 0
         self._layout_final = False
@@ -176,18 +219,29 @@ class Arena:
 
     # -- layout -----------------------------------------------------------
     def region(self, name: str, dtype, shape: Tuple[int, ...],
-               meta: Optional[bool] = None) -> Region:
+               meta: Optional[bool] = None, router=None,
+               _cls=Region, **_slice_kw) -> Region:
+        """``router`` (a row->shard routing spec) is accepted for layout
+        compatibility with ShardedArena and ignored here: a single arena
+        IS one shard."""
         assert not self._layout_final, "layout already finalized"
         assert name not in self.regions
         # Row-align every region to LINE so a row flush never straddles an
         # unrelated region (paper: __attribute__((aligned(64)))).
         self._cursor = _align(self._cursor, LINE)
-        r = Region(self, name, dtype, shape, self._cursor, meta=meta)
+        r = _cls(self, name, dtype, shape, self._cursor, meta=meta,
+                 **_slice_kw)
         self._cursor += _align(r.nbytes, LINE)
         self.regions[name] = r
         self._meta[name] = {"dtype": np.dtype(dtype).str,
                             "shape": list(shape), "offset": r.offset}
         return r
+
+    def region_shards(self, name: str, rows: np.ndarray) -> np.ndarray:
+        """Shard id of each row of region `name` — all zeros for a plain
+        arena (callers group work per shard without caring which arena
+        flavor they hold)."""
+        return np.zeros(len(np.atleast_1d(rows)), np.int64)
 
     def finalize(self) -> None:
         assert not self._layout_final
@@ -296,11 +350,54 @@ class Arena:
 
     def _synth(self, lines: int) -> None:
         if self.synth_line_ns:
-            ns = int(lines * self.synth_line_ns)
+            self._stall(int(lines * self.synth_line_ns))
+
+    def synth_read(self, nbytes: int) -> None:
+        """Synthetic media READ latency for a reload of `nbytes` —
+        the §V-F mirror of the write-side flush stall, at DCPMM media
+        granularity (256 B grains).  Zero-cost unless the arena was
+        opened with ``synth_line_ns`` (the same knob as the write side:
+        one medium, one latency model)."""
+        if self.synth_line_ns:
+            grains = (nbytes + MEDIA_GRAIN - 1) // MEDIA_GRAIN
+            self._stall(int(grains * self.synth_line_ns))
+
+    @contextlib.contextmanager
+    def stall_scope(self):
+        """Aggregate synthetic stalls issued inside the block into ONE
+        stall paid at exit — a flush that touches several regions fences
+        once per drain, not once per region.  The accounting
+        (``fence_ns``) is unchanged; only the pay-out coalesces, which
+        is what keeps the sleep-based stall's timer slack from being
+        charged per region."""
+        self._defer_ns = 0
+        self._defer = True
+        try:
+            yield
+        finally:
+            self._defer = False
+            ns, self._defer_ns = self._defer_ns, 0
+            if ns:
+                self._pay(ns)
+
+    def _stall(self, ns: int) -> None:
+        with self._fence_lock:
             self.stats.fence_ns += ns
-            t0 = time.perf_counter_ns()
-            while time.perf_counter_ns() - t0 < ns:
-                pass
+        if self._defer:
+            self._defer_ns += ns
+            return
+        self._pay(ns)
+
+    def _pay(self, ns: int) -> None:
+        if self.synth_sleep and ns >= 200_000:
+            # big stalls sleep so concurrent shard flushes/reloads
+            # overlap them; sub-200µs stalls stay on the exact spin (the
+            # host timer's wakeup slack would swamp them)
+            time.sleep(ns * 1e-9)
+            return
+        t0 = time.perf_counter_ns()
+        while time.perf_counter_ns() - t0 < ns:
+            pass
 
     def close(self) -> None:
         if isinstance(self._mm, np.memmap):
@@ -312,10 +409,455 @@ def _align(x: int, a: int) -> int:
     return ((x + a - 1) // a) * a
 
 
-def open_arena(path: Optional[str], layout: Dict[str, Tuple], **kw) -> Arena:
-    """Create/open an arena with the given {name: (dtype, shape)} layout."""
-    a = Arena(path, **kw)
-    for name, (dtype, shape) in layout.items():
-        a.region(name, dtype, shape)
+# ======================================================================
+# Sharded arenas (DESIGN.md §7)
+# ======================================================================
+
+
+def _splitmix64(x: np.ndarray) -> np.ndarray:
+    x = x.astype(np.uint64)
+    x = (x ^ (x >> np.uint64(30))) * np.uint64(0xBF58476D1CE4E5B9)
+    x = (x ^ (x >> np.uint64(27))) * np.uint64(0x94D049BB133111EB)
+    return x ^ (x >> np.uint64(31))
+
+
+def route_rows(router, n_rows: int, n_shards: int, rr_hint: int = 0
+               ) -> np.ndarray:
+    """Pure row->shard map for one region.  Routers are functions of the
+    ROW INDEX only (never of row contents): reading a row back after a
+    crash must not require the row to know where it lives.
+
+    * ``("seg", B)``   — block-cyclic: segment ``row // B`` on shard
+      ``(row // B) % n_shards`` (DLL segments, B+Tree leaf ranges);
+    * ``("hash", B)``  — splitmix64(row // B) % n_shards (hashmap slab
+      segments — the paper's bucket-hash scatter, decoupled from insert
+      order; B defaults to 64 rows, so routing stays segment-granular
+      and loads take the ~4 KiB block-copy fast path);
+    * ``("range",)``   — contiguous equal split;
+    * ``("shard", k)`` — pin the whole region to shard k;
+    * ``None``         — small regions (headers) pin to shard
+      ``rr_hint % n_shards`` (round-robin by creation order, so distinct
+      structures' headers spread across shards); larger ones default to
+      ~4 KiB block-cyclic segments.
+    """
+    rows = np.arange(n_rows, dtype=np.int64)
+    if n_shards == 1:
+        return np.zeros(n_rows, np.int32)
+    router = normalize_router(router, n_rows, n_shards, rr_hint)
+    kind = router[0]
+    if kind == "seg":
+        return ((rows // int(router[1])) % n_shards).astype(np.int32)
+    if kind == "hash":
+        blk = int(router[1]) if len(router) > 1 else 64
+        return (_splitmix64(rows // blk) %
+                np.uint64(n_shards)).astype(np.int32)
+    if kind == "range":
+        return np.minimum(rows * n_shards // max(n_rows, 1),
+                          n_shards - 1).astype(np.int32)
+    if kind == "shard":
+        return np.full(n_rows, int(router[1]) % n_shards, np.int32)
+    raise ValueError(f"unknown router {router!r}")
+
+
+def normalize_router(router, n_rows: int, n_shards: int,
+                     rr_hint: int = 0):
+    """Resolve the ``None`` default to a concrete router — the ONE place
+    the defaulting policy lives (route_rows and ShardedRegion both
+    consume it)."""
+    if router is not None:
+        return router
+    if n_rows <= 4 * n_shards:
+        return ("shard", rr_hint)
+    return ("seg", 64)
+
+
+def router_block(router) -> int:
+    """Segment size of a block-granular router (seg/hash), else 0 — the
+    load fast path keys off this."""
+    if router is None:
+        return 0
+    if router[0] == "seg":
+        return int(router[1])
+    if router[0] == "hash":
+        return int(router[1]) if len(router) > 1 else 64
+    return 0
+
+
+class _ShardSlice(Region):
+    """Per-shard persistent slice of a ShardedRegion.
+
+    Local rows pack the parent's assigned global rows in ascending
+    global order; all volatile state lives ONLY in the parent's
+    full-shape array — a slice is pure persistence plumbing, so a crash
+    has exactly one volatile image to discard."""
+
+    def __init__(self, arena, name, dtype, shape, offset, meta=None,
+                 parent=None, gidx=None, arena_index=0):
+        super().__init__(arena, name, dtype, shape, offset, meta=meta)
+        self.vol = None                 # no independent volatile copy
+        self._parent = parent
+        self._gidx = gidx               # local row -> global row
+        self.arena_index = arena_index  # which shard holds this slice
+
+    def _gather(self, rows: np.ndarray) -> np.ndarray:
+        return self._parent.vol[self._gidx[rows]]
+
+    def _gather_range(self, lo: int, hi: int) -> np.ndarray:
+        return self._parent.vol[self._gidx[lo:hi]]
+
+    def _pack_source(self, rows: np.ndarray):
+        return self._parent.vol, self._gidx[rows]
+
+    def load(self) -> None:
+        self._parent.vol[self._gidx] = self._pview()
+
+
+class ShardedRegion:
+    """Facade with the exact Region API structures use (``vol`` /
+    ``mark_rows`` / ``mark_range`` / ``persist_*`` / ``load``), backed
+    by per-shard slices.  Marks and flushes partition by the router;
+    per-shard line/dedup accounting lands in each shard's FlushStats and
+    rolls up through ``ShardedArena.stats``."""
+
+    def __init__(self, arena: "ShardedArena", name: str, dtype,
+                 shape: Tuple[int, ...], meta: Optional[bool] = None,
+                 router=None, rr_hint: int = 0):
+        self.arena = arena
+        self.name = name
+        self.dtype = np.dtype(dtype)
+        self.shape = tuple(shape)
+        self.meta = name.endswith("header") if meta is None else meta
+        self.rowbytes = int(self.dtype.itemsize *
+                            np.prod(shape[1:], dtype=np.int64)) \
+            if len(shape) > 1 else self.dtype.itemsize
+        self.nbytes = self.rowbytes * shape[0]
+        self.vol = np.zeros(self.shape, self.dtype)
+        n = self.shape[0]
+        self.router = router = normalize_router(router, n, arena.n_shards,
+                                                rr_hint)
+        self.shard_of = route_rows(router, n, arena.n_shards, rr_hint)
+        self.local_of = np.zeros(n, np.int64)
+        # block-granular routers (seg/hash) load through a block-level
+        # copy: per-shard FULL-block ids over the (nb, B, ...) view
+        self._blk = router_block(router)
+        nb = (n // self._blk) if self._blk else 0
+        self._blocks: List[Optional[np.ndarray]] = []
+        self.slices: List[Optional[_ShardSlice]] = []
+        for s, shard in enumerate(arena.shards):
+            gidx = np.nonzero(self.shard_of == s)[0]
+            self.local_of[gidx] = np.arange(gidx.size)
+            self._blocks.append(
+                np.nonzero(self.shard_of[:nb * self._blk:self._blk] == s)[0]
+                if self._blk else None)
+            if gidx.size == 0:
+                self.slices.append(None)
+                continue
+            sl = shard.region(name, dtype, (int(gidx.size),) + self.shape[1:],
+                              meta=self.meta, _cls=_ShardSlice,
+                              parent=self, gidx=gidx, arena_index=s)
+            self.slices.append(sl)
+
+    # -- shard partitioning ------------------------------------------------
+    def _split(self, rows: np.ndarray):
+        """Yield (slice, local_rows) per shard holding any of `rows`."""
+        shards = self.shard_of[rows]
+        for s in np.unique(shards):
+            sel = rows[shards == s]
+            yield self.slices[s], self.local_of[sel]
+
+    # -- Region API --------------------------------------------------------
+    def mark_rows(self, rows: np.ndarray) -> None:
+        rows = np.asarray(rows, np.int64)
+        if rows.size == 0:
+            return
+        if self.arena._epoch_depth > 0:
+            # buffered globally; the row->shard split happens once per
+            # epoch at flush (ShardedWriteSet.mark documents why)
+            self.arena.writeset.mark(self, rows)
+        else:
+            self.persist_rows(rows)
+
+    def mark_range(self, lo: int, hi: int) -> None:
+        if hi > lo:
+            self.mark_rows(np.arange(lo, hi, dtype=np.int64))
+
+    def persist_rows(self, rows: np.ndarray) -> None:
+        rows = np.asarray(rows, np.int64)
+        if rows.size == 0:
+            return
+        for sl, local in self._split(np.unique(rows)):
+            sl.persist_rows(local)
+
+    def persist_range(self, lo: int, hi: int) -> None:
+        if hi > lo:
+            self.persist_rows(np.arange(lo, hi, dtype=np.int64))
+
+    def persist_all(self) -> None:
+        self.persist_range(0, self.shape[0])
+
+    def load(self, concurrency: int = 1) -> None:
+        """Reload all shards' rows.  ``concurrency>1`` fans the per-shard
+        block copies out on the arena's shard pool: post-crash loads
+        write cold pages, and page faults parallelize even where pure
+        memcpy bandwidth would not."""
+        if concurrency > 1 and self.arena.n_shards > 1:
+            list(self.arena.pool().map(self.load_shard,
+                                       range(self.arena.n_shards)))
+        else:
+            for s in range(self.arena.n_shards):
+                self.load_shard(s)
+
+    def load_shard(self, s: int) -> None:
+        """Reload this region's shard-s rows into the shared volatile
+        array.  Block-granular routers (seg/hash) copy whole segments
+        through a (blocks, B, ...) view — ~5x the throughput of a
+        row-wise scatter, and a C-level copy that releases the GIL, so
+        the pooled sharded reopen is actually parallel."""
+        sl = self.slices[s]
+        if sl is None:
+            return
+        pv = sl._pview()
+        if self._blk:
+            B = self._blk
+            nb = self.shape[0] // B            # full blocks
+            bs = self._blocks[s]
+            nfull = bs.size
+            if nfull:
+                self.vol[:nb * B].reshape((nb, B) + self.shape[1:])[bs] = \
+                    pv[:nfull * B].reshape((nfull, B) + self.shape[1:])
+            if pv.shape[0] > nfull * B:        # global tail block is ours
+                self.vol[nb * B:] = pv[nfull * B:]
+        else:
+            self.vol[sl._gidx] = pv
+        # per-shard media read stall — sleeps in the shard pool, so N
+        # shards' reload stalls overlap instead of summing
+        sl.arena.synth_read(sl.nbytes)
+
+
+class ShardedArena:
+    """N independent arena shards behind the single-arena API, plus a
+    manifest that makes the cross-shard generation atomic.
+
+    Commit protocol (manifest-last, the NVTree ordering lifted one
+    level):  1. drain every shard's write set — ALL shards' data
+    regions, then all shards' metadata regions (the data-before-metadata
+    barrier is global, not per shard);  2. commit each shard (flush
+    file, bump its header generation, set its valid flag);  3. write the
+    manifest.  A crash between shard commits leaves the manifest at the
+    previous generation — exactly the generation every shard agrees on,
+    which is what recovery reports.
+    """
+
+    def __init__(self, path: Optional[str], n_shards: int = 2,
+                 synth_line_ns: float = 0.0, pack_flush_rows: int = 0):
+        assert n_shards >= 1
+        self.path = path
+        self.n_shards = int(n_shards)
+        self.shards = [Arena(f"{path}.s{k}" if path else None,
+                             synth_line_ns, pack_flush_rows)
+                       for k in range(self.n_shards)]
+        for sh in self.shards:
+            sh.synth_sleep = True
+        self.synth_line_ns = synth_line_ns
+        self.pack_flush_rows = pack_flush_rows
+        self.regions: Dict[str, ShardedRegion] = {}
+        self.writeset = ShardedWriteSet(self)
+        self.generation = 0
+        self._epoch_depth = 0
+        self._layout_final = False
+        self._local_stats = FlushStats()
+        self._man: Optional[np.ndarray] = None
+        self._rr = 0
+        self._pool: Optional[ThreadPoolExecutor] = None
+
+    # -- stats -------------------------------------------------------------
+    @property
+    def stats(self) -> FlushStats:
+        """Aggregate of every shard's per-shard accounting (plus the
+        manifest-level commit calls) — same FlushStats shape callers
+        snapshot()/delta() on a plain arena."""
+        out = self._local_stats.snapshot()
+        for sh in self.shards:
+            for f in dataclasses.fields(FlushStats):
+                setattr(out, f.name,
+                        getattr(out, f.name) + getattr(sh.stats, f.name))
+        return out
+
+    def shard_stats(self) -> List[FlushStats]:
+        return [sh.stats.snapshot() for sh in self.shards]
+
+    # -- epochs ------------------------------------------------------------
+    @contextlib.contextmanager
+    def epoch(self):
+        self._epoch_depth += 1
+        try:
+            yield self
+        finally:
+            self._epoch_depth -= 1
+            if self._epoch_depth == 0:
+                self.writeset.flush()
+
+    # -- layout ------------------------------------------------------------
+    def region(self, name: str, dtype, shape: Tuple[int, ...],
+               meta: Optional[bool] = None, router=None) -> ShardedRegion:
+        assert not self._layout_final, "layout already finalized"
+        assert name not in self.regions
+        r = ShardedRegion(self, name, dtype, shape, meta=meta,
+                          router=router, rr_hint=self._rr)
+        self._rr += 1
+        self.regions[name] = r
+        return r
+
+    def region_shards(self, name: str, rows: np.ndarray) -> np.ndarray:
+        return self.regions[name].shard_of[
+            np.asarray(np.atleast_1d(rows), np.int64)].astype(np.int64)
+
+    def finalize(self) -> None:
+        assert not self._layout_final
+        self._layout_final = True
+        for sh in self.shards:
+            sh.finalize()
+        if self.path is None:
+            self._man = np.zeros(64, np.uint8)
+        else:
+            mp = self.path + ".manifest"
+            create = not os.path.exists(mp)
+            if create:
+                with open(mp, "wb") as f:
+                    f.truncate(64)
+            self._man = np.memmap(mp, dtype=np.uint8, mode="r+",
+                                  shape=(64,))
+            if create:
+                self._write_manifest(valid=False)
+            else:
+                # the manifest records the shard count precisely so a
+                # mis-configured reopen fails loudly instead of mapping
+                # the wrong number of backing files
+                raw = bytes(self._man[: struct.calcsize(_MAN_FMT)])
+                magic, man_shards, _, _ = struct.unpack(_MAN_FMT, raw)
+                if magic == _MAN_MAGIC and man_shards != self.n_shards:
+                    raise ValueError(
+                        f"arena at {self.path!r} was committed with "
+                        f"{man_shards} shards, opened with "
+                        f"{self.n_shards}")
+
+    # -- manifest / commit protocol ----------------------------------------
+    def _write_manifest(self, valid: bool) -> None:
+        man = struct.pack(_MAN_FMT, _MAN_MAGIC, self.n_shards,
+                          self.generation, valid)
+        self._man[: len(man)] = np.frombuffer(man, np.uint8)
+        if isinstance(self._man, np.memmap):
+            self._man.flush()
+
+    def header_generation(self) -> int:
+        raw = bytes(self._man[: struct.calcsize(_MAN_FMT)])
+        magic, _, gen, _ = struct.unpack(_MAN_FMT, raw)
+        return int(gen) if magic == _MAN_MAGIC else 0
+
+    def header_valid(self) -> bool:
+        raw = bytes(self._man[: struct.calcsize(_MAN_FMT)])
+        magic, _, gen, valid = struct.unpack(_MAN_FMT, raw)
+        if magic != _MAN_MAGIC or not valid:
+            return False
+        # the manifest seals generation `gen`; every shard must have
+        # reached at least that far (shards ahead are torn territory the
+        # structures' count-bounded recovery already handles)
+        return all(sh.header_valid() and sh.header_generation() >= gen
+                   for sh in self.shards)
+
+    def commit(self, _crash_after_shard: Optional[int] = None) -> None:
+        """Drain write sets (global data-before-metadata), commit each
+        shard, manifest LAST.  ``_crash_after_shard=k`` is the
+        crash-injection hook for the inter-shard commit window: shards
+        0..k commit, then power fails before the manifest — the fuzzer's
+        sweep point (tests/test_sharded_arena.py)."""
+        self.writeset.flush()
+        tgt = self.generation + 1
+        for k, sh in enumerate(self.shards):
+            if isinstance(sh._mm, np.memmap):
+                sh._mm.flush()
+            sh.generation = tgt
+            sh._write_header(valid=True)
+            if isinstance(sh._mm, np.memmap):
+                sh._mm.flush()
+            if _crash_after_shard is not None and k == _crash_after_shard:
+                self.crash()
+                return
+        self.generation = tgt
+        self._write_manifest(valid=True)
+        self._local_stats.calls += 1
+
+    def invalidate(self) -> None:
+        self._write_manifest(valid=False)
+
+    # -- crash simulation ---------------------------------------------------
+    def crash(self) -> None:
+        """Discard every shard's pending marks and the one volatile image
+        per region (slices carry none).  The volatile buffer is a
+        LONG-LIVED arena: it zeroes in place instead of reallocating, so
+        the post-crash reload writes warm pages — allocator churn and
+        page faults stay out of the recovery-critical path."""
+        self.writeset.discard()
+        for r in self.regions.values():
+            r.vol.fill(0)
+
+    def reopen(self, concurrency: int = 1,
+               exclude: Tuple[str, ...] = ()) -> None:
+        """Reload every region's volatile copy from the shard files —
+        per shard, in the flush pool when ``concurrency>1`` (the loads
+        are big GIL-releasing copies, so N shards reopen in parallel) —
+        then re-anchor the generation to the manifest's.  ``exclude``
+        names regions the caller will load itself (RecoveryManager's
+        per-region load stages)."""
+        regions = [r for n, r in self.regions.items() if n not in exclude]
+
+        def load_shard(s: int) -> None:
+            # one aggregated media stall per shard, not one per region
+            with self.shards[s].stall_scope():
+                for r in regions:
+                    r.load_shard(s)
+
+        if concurrency > 1 and self.n_shards > 1:
+            list(self.pool().map(load_shard, range(self.n_shards)))
+        else:
+            for s in range(self.n_shards):
+                load_shard(s)
+        self.generation = max(self.generation, self.header_generation())
+
+    # -- pool ---------------------------------------------------------------
+    def pool(self) -> ThreadPoolExecutor:
+        """Shared shard-flush/reopen pool.  Sized to the shard count, not
+        the core count: flush stalls sleep (I/O-like), so more waiters
+        than cores still overlap."""
+        if self._pool is None:
+            self._pool = ThreadPoolExecutor(
+                max_workers=self.n_shards,
+                thread_name_prefix="arena-shard")
+        return self._pool
+
+    def close(self) -> None:
+        for sh in self.shards:
+            sh.close()
+        if isinstance(self._man, np.memmap):
+            self._man.flush()
+        self._man = None
+        if self._pool is not None:
+            self._pool.shutdown(wait=True)
+            self._pool = None
+
+
+def open_arena(path: Optional[str], layout: Dict[str, Tuple],
+               n_shards: int = 1, **kw):
+    """Create/open an arena with the given layout.  Layout values are
+    ``(dtype, shape)`` or ``(dtype, shape, router)`` — the router steers
+    rows across shards when ``n_shards > 1`` (route_rows documents the
+    specs).  ``n_shards=1`` returns the plain single Arena: byte- and
+    accounting-identical to the pre-sharding path."""
+    a = Arena(path, **kw) if n_shards == 1 else \
+        ShardedArena(path, n_shards=n_shards, **kw)
+    for name, spec in layout.items():
+        dtype, shape = spec[0], spec[1]
+        router = spec[2] if len(spec) > 2 else None
+        a.region(name, dtype, shape, router=router)
     a.finalize()
     return a

@@ -20,14 +20,21 @@ paged-KV allocator, the checkpoint manager) routes through it:
   topological order, and times each stage into a ``RecoveryReport`` —
   the §V-F reconstruction-time metric, measured per stage.
 
-``recover(concurrency=N)`` runs independent stages of the same
-topological level in a thread pool: recovery wall time approaches the
+``recover(concurrency=N)`` schedules stages by per-stage DEPENDENCY
+COUNTERS in one thread pool: every stage starts the moment ITS OWN
+declared dependencies land — not when its whole topological level does
+(the level barrier the first concurrent implementation used; DESIGN.md
+§7 has the scheduler diagram).  Recovery wall time approaches the
 critical path over the dependency DAG instead of the serial stage sum
 (the report carries all three — ``wall_ms`` / ``critical_path_ms`` /
-``total_ms``).  Stage-completion callbacks (``recover(on_stage=...)``
-or ``add_listener``) fire the moment a stage lands, which is how the
-serving engine admits traffic per slot before the full report exists
-(DESIGN.md §6, "Concurrent recovery & admission").
+``total_ms`` — and each StageReport carries ``ready_at``, the moment
+its dependencies were satisfied, so queue wait and run time read
+separately off the report).  Stage-completion callbacks
+(``recover(on_stage=...)`` or ``add_listener``) fire the moment a stage
+lands, which is how the serving engine admits traffic per slot before
+the full report exists (DESIGN.md §6, "Concurrent recovery &
+admission").  Sharded arenas reopen their shards in a pool of the same
+width before any stage runs.
 
 Reconstructors must be pure given the loaded persistent state: same
 bytes => identical rebuilt volatile redundancy, which the torn-epoch
@@ -206,16 +213,26 @@ class StageReport:
     ``t_start`` / ``t_end`` are wall-clock offsets (seconds) from the
     start of the recovery pass, so a concurrent recovery's timeline can
     be read off the report: overlapping [t_start, t_end) intervals are
-    stages that ran in parallel."""
+    stages that ran in parallel.  ``ready_at`` is the offset at which
+    the stage's declared dependencies were all satisfied — the moment
+    the dependency-counter scheduler queued it — so
+    ``t_start - ready_at`` is pure queue wait (pool contention), split
+    from run time in BENCH_recovery.json."""
     name: str
     seconds: float
     detail: Dict[str, Any] = field(default_factory=dict)
     t_start: float = 0.0
     t_end: float = 0.0
+    ready_at: float = 0.0
+
+    @property
+    def queue_wait(self) -> float:
+        return max(0.0, self.t_start - self.ready_at)
 
     def as_dict(self) -> Dict[str, Any]:
         return {"name": self.name, "seconds": self.seconds,
                 "t_start": self.t_start, "t_end": self.t_end,
+                "ready_at": self.ready_at, "queue_wait": self.queue_wait,
                 **self.detail}
 
 
@@ -287,6 +304,14 @@ class Recoverable:
     reconstructor: str          # name in the core.reconstruct registry
     target: Any                 # object handed to the reconstructor
     depends: Tuple[str, ...] = ()
+    # Arena regions the reconstructor reads (beyond what its `depends`
+    # already rebuilt).  On a SHARDED arena, declared regions become
+    # per-region load stages in the dependency-counter scheduler: this
+    # stage starts the moment ITS regions are loaded, overlapping the
+    # other regions' shard loads with its rebuild (DESIGN.md §7).
+    # None = unknown (conservative: waits for every load); () = reads no
+    # regions directly (only its dependencies' outputs).
+    regions: Optional[Tuple[str, ...]] = None
 
 
 class RecoveryManager:
@@ -319,13 +344,15 @@ class RecoveryManager:
 
     # ------------------------------------------------------------- setup
     def add(self, name: str, reconstructor: str, target: Any,
-            depends: Sequence[str] = ()) -> "RecoveryManager":
+            depends: Sequence[str] = (),
+            regions: Optional[Sequence[str]] = None) -> "RecoveryManager":
         if name in self._items:
             raise ValueError(f"recoverable {name!r} already registered")
         if reconstructor not in reconstruct.names():
             raise KeyError(f"unknown reconstructor {reconstructor!r}")
-        self._items[name] = Recoverable(name, reconstructor, target,
-                                        tuple(depends))
+        self._items[name] = Recoverable(
+            name, reconstructor, target, tuple(depends),
+            tuple(regions) if regions is not None else None)
         return self
 
     def add_listener(self, fn: Callable[[StageReport], None]
@@ -383,16 +410,56 @@ class RecoveryManager:
                 for fn in listeners:
                     fn(st)
 
+        order = self.order()            # validates deps / detects cycles
+        items = self._items
+
+        # Sharded arenas: regions a stage DECLARES become per-region
+        # load stages, so its rebuild starts the moment its own regions
+        # land instead of barriering on the whole reopen (DESIGN.md §7).
+        # region name -> every sharded arena's region of that name (two
+        # arenas MAY carry same-named regions; the load stage reloads
+        # them all, and each arena's reopen excludes exactly the names
+        # it contributed)
+        split: Dict[str, List[Any]] = {}
+        if reopen and any(it.regions for it in items.values()):
+            declared = {r for it in items.values() for r in it.regions or ()}
+            for a in self.arenas:
+                if getattr(a, "n_shards", 1) > 1:
+                    for rname, r in a.regions.items():
+                        # small regions (headers) load in the prologue:
+                        # a sub-ms load isn't worth a scheduler slot,
+                        # and a header queued behind bulk loads would
+                        # gate its structure's rebuild on THEIR finish
+                        if rname in declared and r.nbytes >= 1 << 16:
+                            split.setdefault(rname, []).append(r)
+        # biggest loads first: a large region usually feeds the longest
+        # rebuild, so its load must clear the pool earliest for that
+        # rebuild's start time — the quantity the wall clock follows —
+        # to beat the serial-reopen baseline
+        load_order = sorted(
+            split, key=lambda r: (-max(x.nbytes for x in split[r]), r))
+        load_names = [f"load:{r}" for r in load_order]
+
         reopen_secs = 0.0
         if reopen and self.arenas:
             t0 = time.perf_counter()
             valids = []
             for a in self.arenas:
-                a.reopen()
+                if getattr(a, "n_shards", 1) > 1:
+                    # pooled shard reload of whatever the load stages
+                    # below don't cover (GIL-releasing block copies)
+                    a.reopen(concurrency=report.concurrency,
+                             exclude=tuple(
+                                 n for n, rs in split.items()
+                                 if any(r.arena is a for r in rs)))
+                else:
+                    a.reopen()
                 valids.append(bool(a.header_valid()))
             reopen_secs = time.perf_counter() - t0
             st = report.add("reopen", reopen_secs,
-                            arenas=len(self.arenas), valid=valids)
+                            arenas=len(self.arenas), valid=valids,
+                            shards=[getattr(a, "n_shards", 1)
+                                    for a in self.arenas])
             st.t_start, st.t_end = 0.0, reopen_secs
             report.valid = all(valids)
             # the committed (persisted) generation — survives recovery in
@@ -401,44 +468,129 @@ class RecoveryManager:
                                     for a in self.arenas)
             emit(st)
 
+        results: Dict[str, StageReport] = {}
+        ready_at: Dict[str, float] = {n: reopen_secs for n in load_names}
+        # a stage's load prerequisites: its declared regions' load
+        # stages; an undeclared (regions=None) stage conservatively
+        # waits for every load
+        load_deps = {
+            n: (load_names if items[n].regions is None
+                else [f"load:{r}" for r in items[n].regions if r in split])
+            for n in order}
+        for n in order:
+            if not items[n].depends and not load_deps[n]:
+                ready_at[n] = reopen_secs
+
         def run_stage(name: str) -> StageReport:
-            it = self._items[name]
             t0 = time.perf_counter()
-            out, secs = reconstruct.run(it.reconstructor, it.target)
+            if name.startswith("load:"):
+                regions = split[name[5:]]
+                for region in regions:
+                    region.load(concurrency=report.concurrency)
+                secs = time.perf_counter() - t0
+                detail = {"rows": sum(int(r.shape[0]) for r in regions),
+                          "shards": int(regions[0].arena.n_shards)}
+            else:
+                it = items[name]
+                out, secs = reconstruct.run(it.reconstructor, it.target)
+                detail = dict(out) if isinstance(out, dict) else {}
+                detail.setdefault("reconstructor", it.reconstructor)
             t1 = time.perf_counter()
-            detail = dict(out) if isinstance(out, dict) else {}
-            detail.setdefault("reconstructor", it.reconstructor)
             st = StageReport(name, secs, detail,
-                             t_start=t0 - t_all, t_end=t1 - t_all)
+                             t_start=t0 - t_all, t_end=t1 - t_all,
+                             ready_at=ready_at.get(name, reopen_secs))
             emit(st)
             return st
 
-        for level in self.levels():
-            if report.concurrency > 1 and len(level) > 1:
-                # independent stages of one level: fan out, then barrier —
-                # the next level's dependencies are all of this one
-                with ThreadPoolExecutor(
-                        max_workers=min(report.concurrency,
-                                        len(level))) as ex:
-                    futs = [ex.submit(run_stage, n) for n in level]
-                # .result() re-raises the first stage failure; report
-                # order is submission (registration) order, not
-                # completion order — determinism over luck
-                report.stages.extend(f.result() for f in futs)
-            else:
-                report.stages.extend(run_stage(n) for n in level)
+        full_order = load_names + order
+        depends_of = {n: [] for n in load_names}
+        depends_of.update({n: list(items[n].depends) + load_deps[n]
+                           for n in order})
+        if report.concurrency == 1:
+            # serial: topological order; a stage is "ready" the moment
+            # its last dependency finished
+            for name in full_order:
+                st = run_stage(name)
+                results[name] = st
+                for m in full_order:
+                    if name in depends_of[m]:
+                        ready_at[m] = max(ready_at.get(m, 0.0), st.t_end)
+        else:
+            self._run_counters(full_order, depends_of, run_stage, results,
+                               ready_at, report.concurrency, t_all)
+        # deterministic report order — loads first, then level-major
+        # stages — whatever the completion order was
+        report.stages.extend(results[n] for n in full_order
+                             if n in results)
         report.total_seconds = time.perf_counter() - t_all
         report.critical_path_seconds = reopen_secs + self._critical_path(
+            full_order, depends_of,
             {s.name: s.seconds for s in report.stages})
         return report
 
-    def _critical_path(self, secs: Dict[str, float]) -> float:
+    def _run_counters(self, order: List[str], depends_of: Dict[str, List[str]],
+                      run_stage, results, ready_at,
+                      concurrency: int, t_all: float) -> None:
+        """Dependency-counter scheduler: one pool for the whole DAG
+        (region-load stages included); a stage is submitted the instant
+        its own dependency counter hits zero — no level barrier, so a
+        fast chain races ahead of a slow sibling (DESIGN.md §7).
+        Dependents of a failed stage are never scheduled; the earliest
+        failure (in deterministic topological order) re-raises once
+        in-flight stages drain."""
+        remaining = {n: len(depends_of[n]) for n in order}
+        dependents: Dict[str, List[str]] = {n: [] for n in order}
+        for n in order:
+            for d in depends_of[n]:
+                dependents[d].append(n)
+        errors: Dict[str, BaseException] = {}
+        # RLock: a future that finishes before its done-callback attaches
+        # runs the callback INLINE in the submitting thread, which may
+        # already hold the scheduler lock
+        done_cv = threading.Condition(threading.RLock())
+        outstanding = [0]
+
+        with ThreadPoolExecutor(max_workers=concurrency) as ex:
+            def submit(name: str) -> None:
+                outstanding[0] += 1
+                fut = ex.submit(run_stage, name)
+                fut.add_done_callback(
+                    lambda f, n=name: finished(n, f))
+
+            def finished(name: str, fut) -> None:
+                with done_cv:
+                    try:
+                        results[name] = fut.result()
+                    except BaseException as e:   # noqa: BLE001
+                        errors[name] = e
+                    now = time.perf_counter() - t_all
+                    if name not in errors:
+                        for m in dependents[name]:
+                            remaining[m] -= 1
+                            ready_at[m] = max(ready_at.get(m, 0.0), now)
+                            if remaining[m] == 0:
+                                submit(m)
+                    outstanding[0] -= 1
+                    done_cv.notify_all()
+
+            with done_cv:
+                for n in order:
+                    if remaining[n] == 0:
+                        submit(n)
+                while outstanding[0] > 0:
+                    done_cv.wait()
+        if errors:
+            raise errors[min(errors, key=order.index)]
+
+    def _critical_path(self, order: List[str],
+                       depends_of: Dict[str, List[str]],
+                       secs: Dict[str, float]) -> float:
         """Longest dependency-chain sum of stage times — the wall-time
-        floor of an infinitely concurrent recovery (excludes reopen,
-        which is inherently serial and added by the caller)."""
+        floor of an infinitely concurrent recovery, region-load stages
+        included (excludes the reopen prologue, which is inherently
+        serial and added by the caller)."""
         memo: Dict[str, float] = {}
-        for name in self.order():        # deps resolve before dependents
-            it = self._items[name]
+        for name in order:               # deps resolve before dependents
             memo[name] = secs.get(name, 0.0) + max(
-                (memo[d] for d in it.depends), default=0.0)
+                (memo[d] for d in depends_of[name]), default=0.0)
         return max(memo.values(), default=0.0)

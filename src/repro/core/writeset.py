@@ -25,6 +25,15 @@ charged — the paper's redundant-flush overhead, measured directly.
 last flush are dropped from the write set ("don't persist what didn't
 change"), unifying the checkpoint manager's incremental mode with the
 row-granularity tracker here.
+
+``ShardedWriteSet`` coordinates one WriteSet per arena shard
+(DESIGN.md §7): an epoch close flushes every shard's DATA regions in
+the shard pool, barriers, then flushes every shard's METADATA regions —
+the data-before-metadata ordering is global across shards, so a
+structure whose header landed on shard 0 can never expose rows that a
+slower shard 3 hadn't flushed yet.  Per-shard line/dedup accounting
+stays in each shard's FlushStats and rolls up through
+``ShardedArena.stats``.
 """
 from __future__ import annotations
 
@@ -32,7 +41,7 @@ from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
-__all__ = ["WriteSet", "DigestWriteSet"]
+__all__ = ["WriteSet", "ShardedWriteSet", "DigestWriteSet"]
 
 
 class WriteSet:
@@ -70,14 +79,33 @@ class WriteSet:
         point used by recovery tests."""
         if not self._pending:
             return
+        flushed = self.flush_phase(meta=False)
+        if include_meta:
+            flushed = self.flush_phase(meta=True) or flushed
+        else:
+            self._pending.clear()   # crash point: metadata marks are lost
+        if flushed:
+            self.arena.stats.epochs += 1
+
+    def flush_phase(self, meta: bool) -> bool:
+        """Flush only the data half (``meta=False``) or only the
+        metadata half (``meta=True``) of the pending marks, leaving the
+        other half pending.  The two-phase split is what lets
+        ShardedWriteSet barrier ALL shards' data ahead of ANY shard's
+        metadata.  Returns whether anything flushed; the caller owns the
+        ``epochs`` counter."""
         arena = self.arena
-        names = list(self._pending)
-        names.sort(key=lambda n: (arena.regions[n].meta, arena.regions[n].offset))
+        names = [n for n in self._pending if arena.regions[n].meta == meta]
+        names.sort(key=lambda n: arena.regions[n].offset)
+        flushed_any = False
+        with arena.stall_scope():
+            flushed_any = self._flush_names(names, arena)
+        return flushed_any
+
+    def _flush_names(self, names, arena) -> bool:
         flushed_any = False
         for name in names:
             region = arena.regions[name]
-            if region.meta and not include_meta:
-                continue
             marks = self._pending.pop(name)
             rows = np.unique(np.concatenate([r for r, _ in marks]))
             would_lines = sum(w for _, w in marks)
@@ -89,18 +117,132 @@ class WriteSet:
             arena.stats.saved_lines += max(0, would_lines - actual)
             arena.stats.dedup_rows += marked_rows - rows.size
             flushed_any = True
-        if not include_meta:
-            self._pending.clear()   # crash point: metadata marks are lost
-        if flushed_any:
-            arena.stats.epochs += 1
+        return flushed_any
 
     def _copy_rows(self, region, rows: np.ndarray) -> None:
         pv = region._pview()
         if (self.arena.pack_flush_rows
                 and rows.size >= self.arena.pack_flush_rows):
-            pv[rows] = _pack_gather(region.vol, rows)
+            vol, vrows = region._pack_source(rows)
+            pv[rows] = _pack_gather(vol, vrows)
         else:
-            pv[rows] = region.vol[rows]
+            pv[rows] = region._gather(rows)
+
+
+class ShardedWriteSet:
+    """Cross-shard epoch coordinator.
+
+    Marks are buffered GLOBALLY per region — one cheap append per
+    ``mark_rows`` call, exactly like the single-arena tracker — and the
+    row->shard split happens ONCE per epoch at flush time, not once per
+    mark (a B+Tree batch marks dozens of row sets per op; splitting
+    each of them per shard would multiply the bookkeeping by the shard
+    count).  The flush fans per-shard copy+account work out on the
+    arena's shard pool in two phases: every shard's DATA regions land
+    before ANY shard's metadata — the data-before-metadata barrier is
+    global, so a header on shard 0 can never expose rows a slower shard
+    3 hadn't flushed."""
+
+    def __init__(self, arena):
+        self.arena = arena
+        # region name -> [list of unique row arrays, would_lines, marked]
+        self._pending: Dict[str, list] = {}
+
+    def mark(self, region, rows: np.ndarray) -> None:
+        rows = np.unique(np.asarray(rows, np.int64))
+        if rows.size == 0:
+            return
+        # the per-call counterfactual (what one accounting call per mark
+        # would have charged) is computed on the GLOBAL rows with the
+        # ONE shared counting rule — identical to the single-arena
+        # bookkeeping, O(1) for line-aligned rows.  (For rows that are
+        # line-aligned — every current region — the flushed-lines total
+        # is shard-count-invariant too; sub-line rows split across
+        # shards legitimately charge a shared line once PER FILE.)
+        from repro.core.arena import Arena
+        would = Arena._rows_line_count(0, region.rowbytes, rows)
+        ent = self._pending.get(region.name)
+        if ent is None:
+            ent = self._pending[region.name] = [[], 0, 0]
+        ent[0].append(rows)
+        ent[1] += would
+        ent[2] += rows.size
+        self.arena._local_stats.marks += 1
+
+    def __bool__(self) -> bool:
+        return bool(self._pending)
+
+    def discard(self) -> None:
+        self._pending.clear()
+
+    def flush(self, include_meta: bool = True) -> None:
+        if not self._pending:
+            return
+        arena = self.arena
+        flushed = self._flush_phase(meta=False)
+        if include_meta:
+            flushed = self._flush_phase(meta=True) or flushed
+        else:
+            self._pending.clear()   # crash point: metadata marks are lost
+        if flushed:
+            arena._local_stats.epochs += 1
+
+    def flush_phase(self, meta: bool) -> bool:
+        return self._flush_phase(meta)
+
+    def _flush_phase(self, meta: bool) -> bool:
+        arena = self.arena
+        names = [n for n in self._pending
+                 if arena.regions[n].meta == meta]
+        names.sort(key=lambda n: n)
+        if not names:
+            return False
+        # split each region's deduplicated rows per shard ONCE, then fan
+        # the copy + per-shard line accounting out on the shard pool
+        work: Dict[int, list] = {}      # shard -> [(slice, local rows)]
+        region_rows = []
+        for name in names:
+            region = arena.regions[name]
+            arrs, would, marked = self._pending.pop(name)
+            rows = np.unique(np.concatenate(arrs)) if len(arrs) > 1 \
+                else arrs[0]
+            region_rows.append((region, rows, would, marked))
+            for sl, local in region._split(rows):
+                work.setdefault(sl.arena_index, []).append((sl, local))
+
+        actual = {}                     # shard -> lines flushed there
+
+        def flush_shard(s: int) -> None:
+            shard = arena.shards[s]
+            before = shard.stats.lines
+            with shard.stall_scope():
+                for sl, local in work[s]:
+                    self._copy_rows(sl, local)
+                    shard._account_rows(sl.offset, sl.rowbytes, local)
+            actual[s] = shard.stats.lines - before
+
+        shards = sorted(work)
+        if len(shards) > 1:
+            list(arena.pool().map(flush_shard, shards))
+        else:
+            flush_shard(shards[0])
+        # region-level dedup/saved accounting against the global
+        # counterfactual (rolls up through ShardedArena.stats)
+        total_actual = sum(actual.values())
+        would_total = sum(w for _, _, w, _ in region_rows)
+        arena._local_stats.saved_lines += max(0, would_total - total_actual)
+        arena._local_stats.dedup_rows += sum(
+            m - r.size for _, r, _, m in region_rows)
+        return True
+
+    def _copy_rows(self, sl, rows: np.ndarray) -> None:
+        pv = sl._pview()
+        if (self.arena.pack_flush_rows
+                and rows.size >= self.arena.pack_flush_rows):
+            vol, vrows = sl._pack_source(rows)
+            pv[rows] = _pack_gather(vol, vrows)
+        else:
+            pv[rows] = sl._gather(rows)
 
 
 def _pack_gather(vol: np.ndarray, rows: np.ndarray) -> np.ndarray:

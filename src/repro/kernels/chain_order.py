@@ -11,10 +11,20 @@ TPU adaptation (same dynamic-gather pattern as pack_flush/hash_probe):
 pointer chasing doesn't vectorize as lane ops, so the per-node gather
 ``jump[jump[i]]`` is steered by the *scalar-prefetched* jump array in the
 BlockSpec index_map; the kernel body only masks the NULL-absorbed lanes.
+
+Sharded arenas (DESIGN.md §7) add a ``segments`` offset argument: a
+sharded region's NEXT column arrives as N per-shard views concatenated
+shard-major (what a recovery DMA reads straight out of the shard files,
+no host re-gather), while pointer VALUES stay global row ids.  With the
+block-cyclic segment router the packed position of global id g is
+closed-form — ``packed_positions`` — so the doubling rounds steer their
+gathers through the per-shard segments directly: pass
+``segments=<shard row offsets>, seg_rows=<router segment size>`` and
+the primitives accept the packed layout, returning global ids.
 """
 from __future__ import annotations
 
-from typing import List, Tuple
+from typing import List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -23,6 +33,28 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 NULL = -1
+
+
+def packed_positions(ids, seg_rows: int, segments):
+    """Position of each global row id in a shard-major packed array.
+
+    ``segments`` — (n_shards + 1,) row offsets of each shard's span in
+    the packed array (``segments[s]`` = rows held by shards < s); shard
+    of a global id under the block-cyclic router is
+    ``(id // seg_rows) % n_shards`` and its local rank is
+    ``(id // (seg_rows * n_shards)) * seg_rows + id % seg_rows`` —
+    exact even when the last block is partial, because earlier blocks of
+    a shard are always full.  Works on numpy and jax arrays alike.
+    Negative ids (NULL) map to NULL."""
+    n_shards = len(segments) - 1
+    seg = ids // seg_rows
+    shard = seg % n_shards
+    local = (ids // (seg_rows * n_shards)) * seg_rows + ids % seg_rows
+    if isinstance(ids, np.ndarray):
+        base = np.asarray(segments)[np.maximum(shard, 0)]
+        return np.where(ids >= 0, base + local, NULL)
+    base = jnp.asarray(segments)[jnp.maximum(shard, 0)]
+    return jnp.where(ids >= 0, base + local, NULL)
 
 
 def _double_kernel(jmp_ref, jump_at_ref, cnt_at_ref, cnt_ref,
@@ -40,28 +72,40 @@ def _double_kernel(jmp_ref, jump_at_ref, cnt_at_ref, cnt_ref,
 
 
 def jump_double(jump: jax.Array, cnt: jax.Array, *,
+                segments: Optional[np.ndarray] = None,
+                seg_rows: int = 0,
                 interpret: bool = True) -> Tuple[jax.Array, jax.Array]:
     """jump, cnt: (N,) int32.  Returns (jump', cnt') after one doubling
     round: jump'[i] = jump[jump[i]] (NULL absorbing), cnt'[i] = cnt[i] +
     cnt[jump[i]] for live lanes.  Out-of-range pointers terminate like
     NULL (the shared torn-epoch contract of core.recovery.jump_tables):
-    sanitized here, so every round's output is in-range-or-NULL."""
+    sanitized here, so every round's output is in-range-or-NULL.
+
+    With ``segments``/``seg_rows`` the arrays are shard-major packed
+    (per-shard views of a sharded region, concatenated) while pointer
+    VALUES are global ids: the steering array handed to the scalar
+    prefetcher is the pointers' packed POSITION (closed-form translate),
+    so each gather lands inside the right shard's segment."""
     n = jump.shape[0]
     jump = jnp.where((jump >= 0) & (jump < n), jump, NULL)
+    if segments is not None:
+        steer = packed_positions(jump, seg_rows, segments).astype(jnp.int32)
+    else:
+        steer = jump
     grid = (n,)
     spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=grid,
         in_specs=[
             pl.BlockSpec((1, 1),
-                         lambda i, j_ref: (jnp.maximum(j_ref[i], 0), 0)),
+                         lambda i, p_ref: (jnp.maximum(p_ref[i], 0), 0)),
             pl.BlockSpec((1, 1),
-                         lambda i, j_ref: (jnp.maximum(j_ref[i], 0), 0)),
-            pl.BlockSpec((1, 1), lambda i, j_ref: (i, 0)),
+                         lambda i, p_ref: (jnp.maximum(p_ref[i], 0), 0)),
+            pl.BlockSpec((1, 1), lambda i, p_ref: (i, 0)),
         ],
         out_specs=[
-            pl.BlockSpec((1, 1), lambda i, j_ref: (i, 0)),
-            pl.BlockSpec((1, 1), lambda i, j_ref: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i, p_ref: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i, p_ref: (i, 0)),
         ],
     )
     j2, c2 = pl.pallas_call(
@@ -70,15 +114,20 @@ def jump_double(jump: jax.Array, cnt: jax.Array, *,
         out_shape=(jax.ShapeDtypeStruct((n, 1), jnp.int32),
                    jax.ShapeDtypeStruct((n, 1), jnp.int32)),
         interpret=interpret,
-    )(jump, jump[:, None], cnt[:, None], cnt[:, None])
+    )(steer, jump[:, None], cnt[:, None], cnt[:, None])
     return j2[:, 0], c2[:, 0]
 
 
 def chain_tables_device(nxt: np.ndarray, bits: int, *,
+                        segments: Optional[np.ndarray] = None,
+                        seg_rows: int = 0,
                         interpret: bool = True
                         ) -> Tuple[List[np.ndarray], np.ndarray]:
     """Binary-lifting tables via the kernel: returns ([jump^(2^k) for
-    k < bits], counts) with counts[i] = min(2^bits, chain length from i)."""
+    k < bits], counts) with counts[i] = min(2^bits, chain length from i).
+
+    ``segments``/``seg_rows``: `nxt` is shard-major packed (see module
+    docstring); tables then hold GLOBAL ids at PACKED positions."""
     # sanitize at full width BEFORE the int32 narrowing: a torn 64-bit
     # pointer like 2**32+3 would otherwise wrap to a valid-looking 3
     # instead of terminating the chain (the module-wide OOB contract)
@@ -89,26 +138,43 @@ def chain_tables_device(nxt: np.ndarray, bits: int, *,
     cnt = jnp.ones(nxt.shape[0], jnp.int32)
     tables = [np.asarray(jump, np.int64)]
     for _ in range(bits - 1):
-        jump, cnt = jump_double(jump, cnt, interpret=interpret)
+        jump, cnt = jump_double(jump, cnt, segments=segments,
+                                seg_rows=seg_rows, interpret=interpret)
         tables.append(np.asarray(jump, np.int64))
     # one more round so counts saturate past 2^(bits-1)-long chains
-    _, cnt = jump_double(jump, cnt, interpret=interpret)
+    _, cnt = jump_double(jump, cnt, segments=segments, seg_rows=seg_rows,
+                         interpret=interpret)
     return tables, np.asarray(cnt, np.int64)
 
 
 def chain_order_device(nxt: np.ndarray, head: int, *,
+                       segments: Optional[np.ndarray] = None,
+                       seg_rows: int = 0,
                        interpret: bool = True) -> np.ndarray:
     """Full device-built chain order: the doubling rounds run in the
     Pallas kernel; the final node-at-position extraction is a cheap
     O(count log count) gather off the returned tables.  A head outside
     [0, n) is a terminated chain (empty order) — the same OOB contract
-    as the host primitive."""
+    as the host primitive.
+
+    ``segments``/``seg_rows`` accept the shard-major packed NEXT column
+    of a sharded region (the per-shard persistent views, concatenated —
+    no host re-gather); `head` and the returned order are global ids
+    either way."""
     n = nxt.shape[0]
     if head < 0 or head >= n:
         return np.empty(0, np.int64)
+
+    def pos_of(ids):
+        if segments is None:
+            return ids
+        return packed_positions(ids, seg_rows, segments)
+
     bits = max(1, int(n).bit_length())
-    tables, cnt = chain_tables_device(nxt, bits, interpret=interpret)
-    count = int(cnt[head])
+    tables, cnt = chain_tables_device(nxt, bits, segments=segments,
+                                      seg_rows=seg_rows,
+                                      interpret=interpret)
+    count = int(cnt[pos_of(np.asarray([head], np.int64))[0]])
     if count > n:
         raise RuntimeError("cycle in chain")
     pos = np.arange(count)
@@ -116,5 +182,5 @@ def chain_order_device(nxt: np.ndarray, head: int, *,
     for k in range(len(tables)):
         m = (pos >> k) & 1 == 1
         if m.any():
-            cur[m] = tables[k][cur[m]]
+            cur[m] = tables[k][pos_of(cur[m])]
     return cur

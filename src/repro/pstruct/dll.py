@@ -36,6 +36,12 @@ from repro.core.recovery import chain_order
 NULL = -1
 DATA_WORDS = 7
 
+# Sharded-arena routing (DESIGN.md §7): node rows stripe block-cyclically
+# in segments of 64 — appends fill a segment on one shard then roll to
+# the next, so a batch's flush fans out across shard files while rows
+# within a segment still coalesce lines.
+SHARD_SEG = 64
+
 # header slots
 H_FLAG, H_HEAD, H_COUNT, H_TAIL, H_FREE_HEAD, H_FRESH = range(6)
 
@@ -52,7 +58,8 @@ class DoublyLinkedList:
         row = 8 if mode == "partly" else 16
         self._row = row
         self.nodes = arena.regions.get(f"{name}.nodes") or arena.region(
-            f"{name}.nodes", np.int64, (capacity, row))
+            f"{name}.nodes", np.int64, (capacity, row),
+            router=("seg", SHARD_SEG))
         self.header = arena.regions.get(f"{name}.header") or arena.region(
             f"{name}.header", np.int64, (1, 8))
         # volatile redundancy
@@ -65,7 +72,8 @@ class DoublyLinkedList:
     @staticmethod
     def layout(capacity: int, mode: str = "partly", name: str = "dll"):
         row = 8 if mode == "partly" else 16
-        return {f"{name}.nodes": (np.int64, (capacity, row)),
+        return {f"{name}.nodes": (np.int64, (capacity, row),
+                                  ("seg", SHARD_SEG)),
                 f"{name}.header": (np.int64, (1, 8))}
 
     # ------------- views over the node rows -------------

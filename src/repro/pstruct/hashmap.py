@@ -58,8 +58,13 @@ class Hashmap:
         self.arena = arena
         row = 8 if mode == "partly" else 16
         self._row = row
+        # Sharded routing (DESIGN.md §7): entry rows scatter by a hash
+        # of their 64-row segment — the paper's bucket-hash dispersal
+        # decoupled from insert order, so an append burst fans out
+        # across shard files instead of serializing on the shard that
+        # owns the slab frontier (segment-granular: loads block-copy).
         self.entries = arena.regions.get(f"{name}.entries") or arena.region(
-            f"{name}.entries", np.int64, (capacity, row))
+            f"{name}.entries", np.int64, (capacity, row), router=("hash",))
         self.header = arena.regions.get(f"{name}.header") or arena.region(
             f"{name}.header", np.int64, (1, 8))
         n_max = _next_pow2(max(16, int(capacity / load_factor)))
@@ -70,7 +75,8 @@ class Hashmap:
         self._pbuckets = None
         if mode == "full":
             self._pbuckets = arena.regions.get(f"{name}.buckets") or \
-                arena.region(f"{name}.buckets", np.int64, (n_max, 1))
+                arena.region(f"{name}.buckets", np.int64, (n_max, 1),
+                             router=("seg", 64))
         self.n_buckets = _next_pow2(max(16, int(capacity / load_factor)))
         self.buckets = np.full(self.n_buckets, NULL, np.int64)  # volatile
         self.chain = np.full(capacity, NULL, np.int64)  # volatile next
@@ -80,11 +86,11 @@ class Hashmap:
     def layout(capacity: int, mode: str = "partly", name: str = "hm",
                load_factor: float = 0.75):
         row = 8 if mode == "partly" else 16
-        out = {f"{name}.entries": (np.int64, (capacity, row)),
+        out = {f"{name}.entries": (np.int64, (capacity, row), ("hash",)),
                f"{name}.header": (np.int64, (1, 8))}
         if mode == "full":
             n_max = _next_pow2(max(16, int(capacity / load_factor)))
-            out[f"{name}.buckets"] = (np.int64, (n_max, 1))
+            out[f"{name}.buckets"] = (np.int64, (n_max, 1), ("seg", 64))
         return out
 
     def _persist_buckets(self, bkts: np.ndarray) -> None:

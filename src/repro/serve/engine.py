@@ -53,6 +53,11 @@ class EngineConfig:
     max_requests: int = 64
     mode: str = "partly"          # persistence mode for host structures
     page_tokens: int = 16
+    # Shard count of the host persistence substrate (DESIGN.md §7): the
+    # token-log slab stripes slot-per-shard, the request hashmap's slab
+    # hashes across shards, and the paged-KV metadata arena shards too —
+    # recovery re-admits traffic per (shard, prompt-length) group.
+    n_shards: int = 1
 
 
 class ServingEngine:
@@ -62,14 +67,18 @@ class ServingEngine:
         self.params = params
         self.cfg = cfg
         layout = dict(Hashmap.layout(cfg.max_requests, cfg.mode, name="req"))
-        layout["tokens"] = (np.int32, (cfg.max_batch, cfg.s_max))
-        self.arena = open_arena(arena_path, layout)
+        # token-log rows stripe slot-per-shard: re-prefill after a crash
+        # reads each slot's prompt from its own shard file
+        layout["tokens"] = (np.int32, (cfg.max_batch, cfg.s_max),
+                            ("seg", 1))
+        self.arena = open_arena(arena_path, layout, n_shards=cfg.n_shards)
         self.table = Hashmap(self.arena, cfg.max_requests, cfg.mode,
                              name="req")
         self.tok_region = self.arena.regions["tokens"]
         self.paging = PagedAllocator(PagedConfig(
             n_pages=cfg.max_batch * (cfg.s_max // cfg.page_tokens),
-            page_tokens=cfg.page_tokens, mode=cfg.mode))
+            page_tokens=cfg.page_tokens, mode=cfg.mode,
+            n_shards=cfg.n_shards))
         # device state (DERIVABLE)
         self.cache = model.init_cache(cfg.max_batch, cfg.s_max)
         self.pos = np.zeros(cfg.max_batch, np.int64)       # per-slot length
@@ -226,13 +235,18 @@ class ServingEngine:
         Returns seconds; the staged RecoveryReport lands in
         ``last_recovery``."""
         self._recover_concurrency = max(1, int(concurrency))
+        req_regions = tuple(n for n in self.arena.regions
+                            if n.startswith("req."))
         mgr = RecoveryManager(self.arena, self.paging.arena)
-        mgr.add("req_table", "pstruct.hashmap", self.table)
-        mgr.add("lru", "pstruct.dll", self.paging.lru)
+        mgr.add("req_table", "pstruct.hashmap", self.table,
+                regions=req_regions)
+        mgr.add("lru", "pstruct.dll", self.paging.lru,
+                regions=("lru.nodes", "lru.header"))
         mgr.add("pages", "serve.paged_alloc", self.paging,
-                depends=("lru",))
+                depends=("lru",), regions=("lru.nodes",))
         mgr.add("engine", "serve.engine", self,
-                depends=("req_table", "pages"))
+                depends=("req_table", "pages"),
+                regions=req_regions + ("tokens",))
         report = mgr.recover(concurrency=concurrency, on_stage=on_stage)
         self.last_recovery = report
         return report.total_seconds
@@ -243,13 +257,18 @@ def _reconstruct_engine(eng: "ServingEngine") -> dict:
     """Pure rebuild of the engine's DERIVABLE state from the recovered
     request table: one vectorized scan over the dense entry slab (no
     per-entry Python loop), then grouped re-prefill — slots sharing a
-    prompt length share a single batched prefill call.  Each group's
-    slots are re-admitted (``slot_ready``) the moment its prefill lands,
-    and ``on_slot_ready`` fires with the admission offset — empty slots
-    admit right after the scan, so new requests need not wait for old
-    ones to re-prefill.  Groups run in a thread pool when the engine is
-    recovering with ``concurrency>1`` (model calls parallel, cache
-    scatter serialized by the cache lock)."""
+    (token-log shard, prompt length) pair share a single batched prefill
+    call.  Each group's slots are re-admitted (``slot_ready``) the
+    moment its prefill lands, and ``on_slot_ready`` fires with the
+    admission offset — empty slots admit right after the scan, so new
+    requests need not wait for old ones to re-prefill.  On a sharded
+    arena admission goes per SHARD-GROUP (DESIGN.md §7): each group
+    reads only its own shard's token rows, so groups stream out of
+    independent shard files instead of queueing behind one; on
+    ``n_shards=1`` the grouping degenerates to the per-length grouping
+    exactly.  Groups run in a thread pool when the engine is recovering
+    with ``concurrency>1`` (model calls parallel, cache scatter
+    serialized by the cache lock)."""
     cfg = eng.cfg
     t0 = time.perf_counter()
     eng.cache = eng.model.init_cache(cfg.max_batch, cfg.s_max)
@@ -270,10 +289,12 @@ def _reconstruct_engine(eng: "ServingEngine") -> dict:
     ready = np.ones(cfg.max_batch, bool)
     ready[slots] = False
     eng.slot_ready = ready
-    groups = np.unique(tlens)
+    shards = eng.arena.region_shards("tokens", slots)
+    groups = sorted({(int(s), int(tl)) for s, tl in zip(shards, tlens)})
 
-    def prefill_group(tl: int) -> float:
-        sel = slots[tlens == tl]
+    def prefill_group(key: Tuple[int, int]) -> float:
+        shard, tl = key
+        sel = slots[(shards == shard) & (tlens == tl)]
         eng._prefill_slots(sel, np.array(eng.tok_region.vol[sel, :tl],
                                          np.int32))
         with eng._admit_lock:
@@ -285,14 +306,16 @@ def _reconstruct_engine(eng: "ServingEngine") -> dict:
         return admitted
 
     conc = max(1, int(eng._recover_concurrency))
-    if conc > 1 and groups.size > 1:
+    if conc > 1 and len(groups) > 1:
         with ThreadPoolExecutor(
-                max_workers=min(conc, int(groups.size))) as ex:
-            admissions = list(ex.map(prefill_group, groups.tolist()))
+                max_workers=min(conc, len(groups))) as ex:
+            admissions = list(ex.map(prefill_group, groups))
     else:
-        admissions = [prefill_group(tl) for tl in groups.tolist()]
+        admissions = [prefill_group(g) for g in groups]
     return {"requests": int(live.sum()),
-            "prefill_groups": int(groups.size),
+            "prefill_groups": len(groups),
+            "shard_groups": int(np.unique(shards).size) if slots.size
+            else 0,
             "first_admission_s": round(min(admissions), 6)
             if admissions else 0.0,
             "last_admission_s": round(max(admissions), 6)

@@ -29,16 +29,22 @@ class PagedConfig:
     n_pages: int = 1024
     page_tokens: int = 64
     mode: str = "partly"
+    n_shards: int = 1      # shard count of the page-metadata arena
 
 
 class PagedAllocator:
     """LRU page pool.  data row of the DLL node = (page_id, owner_request,
-    first_token, n_tokens, 0, 0, 0)."""
+    first_token, n_tokens, 0, 0, 0).
+
+    With ``n_shards > 1`` the LRU's node slab stripes across arena
+    shards (the DLL's segment router), so page-metadata flushes from an
+    allocation burst fan out over independent backing files
+    (DESIGN.md §7)."""
 
     def __init__(self, cfg: PagedConfig, path: Optional[str] = None):
         self.cfg = cfg
         layout = DoublyLinkedList.layout(cfg.n_pages, cfg.mode, name="lru")
-        self.arena = open_arena(path, layout)
+        self.arena = open_arena(path, layout, n_shards=cfg.n_shards)
         self.lru = DoublyLinkedList(self.arena, cfg.n_pages, cfg.mode,
                                     name="lru")
         self.page_of_node: Dict[int, int] = {}
@@ -104,8 +110,10 @@ class PagedAllocator:
         callbacks pass through to the manager.  Returns seconds (the
         full RecoveryReport lands in ``last_recovery``)."""
         mgr = RecoveryManager(self.arena)
-        mgr.add("lru", "pstruct.dll", self.lru)
-        mgr.add("pages", "serve.paged_alloc", self, depends=("lru",))
+        mgr.add("lru", "pstruct.dll", self.lru,
+                regions=("lru.nodes", "lru.header"))
+        mgr.add("pages", "serve.paged_alloc", self, depends=("lru",),
+                regions=("lru.nodes",))
         report = mgr.recover(concurrency=concurrency, on_stage=on_stage)
         self.last_recovery = report
         return report.total_seconds

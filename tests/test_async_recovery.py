@@ -22,6 +22,7 @@ Four invariant families:
   APPROXIMABLE re-warming off the restore critical path without
   changing the restored state.
 """
+import os
 import threading
 
 import numpy as np
@@ -35,6 +36,11 @@ from repro.pstruct.hashmap import Hashmap
 
 MODES = ("partly", "full")
 
+# CI matrix axis (DESIGN.md §7): the whole crash/recovery fuzz suite
+# reruns on a sharded substrate with REPRO_N_SHARDS=4 — every invariant
+# here is shard-count-independent.
+N_SHARDS = int(os.environ.get("REPRO_N_SHARDS", "1"))
+
 
 # ---------------------------------------------------------------- helpers
 
@@ -44,10 +50,18 @@ def _mixed_arena(mode):
     layout.update(DoublyLinkedList.layout(256, mode, name="dll"))
     layout.update(BPTree.layout(256, 1024, mode, name="bt"))
     layout.update(Hashmap.layout(512, mode, name="hm"))
-    a = open_arena(None, layout)
+    a = open_arena(None, layout, n_shards=N_SHARDS)
     return (a, DoublyLinkedList(a, 256, mode, name="dll"),
             BPTree(a, 256, 1024, mode, name="bt"),
             Hashmap(a, 512, mode, name="hm"))
+
+
+def _pmem_image(a) -> np.ndarray:
+    """Every persistent byte of the arena, shard files concatenated."""
+    if hasattr(a, "shards"):
+        return np.concatenate([np.asarray(sh._mm) for sh in a.shards]
+                              + [np.asarray(a._man)])
+    return np.asarray(a._mm).copy()
 
 
 def _script(n_ops, seed=0):
@@ -190,9 +204,9 @@ def test_double_failure_mid_stage(torn, concurrency, crash_after_stage):
             a.writeset.flush(include_meta=False)
         a.crash()
     # reference: what one uninterrupted recovery of this image rebuilds
-    pmem0 = a._mm.copy()
+    pmem0 = _pmem_image(a)
     _manager(a, d, t, h).recover()
-    np.testing.assert_array_equal(a._mm, pmem0)   # recovery persists nothing
+    np.testing.assert_array_equal(_pmem_image(a), pmem0)   # recovery persists nothing
     want = _fingerprint(a, d, t, h)
 
     # the fuzzed run: recover again, crashing mid-recovery after stage k
@@ -209,11 +223,11 @@ def test_double_failure_mid_stage(torn, concurrency, crash_after_stage):
                                      on_stage=bomb)
     except Exception:
         pass          # garbage volatile state may fail loudly — allowed
-    np.testing.assert_array_equal(a._mm, pmem0)   # still nothing persisted
+    np.testing.assert_array_equal(_pmem_image(a), pmem0)   # still nothing persisted
     report = _manager(a, d, t, h).recover(concurrency=concurrency)
     assert report.valid
     _assert_fp_equal(_fingerprint(a, d, t, h), want)
-    np.testing.assert_array_equal(a._mm, pmem0)
+    np.testing.assert_array_equal(_pmem_image(a), pmem0)
 
 
 # ------------------------------------------------- report truthfulness

@@ -167,6 +167,62 @@ def test_chain_order_device_treats_oob_pointer_as_terminator():
     np.testing.assert_array_equal(got, chain_order_np(nxt, 0))
 
 
+@pytest.mark.parametrize("n,B,N", [(203, 8, 3), (256, 64, 4), (40, 16, 4)])
+def test_chain_order_device_segments_matches_global(n, B, N):
+    """The sharded-arena path (DESIGN.md §7): the NEXT column arrives as
+    per-shard views concatenated shard-major (`segments` offsets), with
+    pointer values still global — the kernel's steering translate must
+    reproduce the global-array order exactly."""
+    from repro.core.recovery import chain_order as chain_order_np
+    rng = np.random.default_rng(n)
+    perm = rng.permutation(n)
+    nxt = np.full(n, -1, np.int64)
+    nxt[perm[:-1]] = perm[1:]
+    head = int(perm[0])
+    shard_of = (np.arange(n) // B) % N
+    segments = np.zeros(N + 1, np.int64)
+    packed = np.empty(n, np.int64)
+    off = 0
+    for s in range(N):
+        gidx = np.nonzero(shard_of == s)[0]
+        packed[off:off + gidx.size] = nxt[gidx]
+        segments[s] = off
+        off += gidx.size
+    segments[N] = off
+    # the closed-form translate IS the packing
+    pp = chain_order.packed_positions(np.arange(n, dtype=np.int64), B,
+                                      segments)
+    np.testing.assert_array_equal(packed[pp], nxt)
+    got = chain_order.chain_order_device(packed, head, segments=segments,
+                                         seg_rows=B, interpret=True)
+    np.testing.assert_array_equal(got, chain_order_np(nxt, head))
+
+
+def test_chain_order_device_segments_from_sharded_dll():
+    """End to end: a sharded arena's per-shard persistent NEXT views,
+    concatenated WITHOUT any host re-gather, recover the DLL order the
+    host primitive computes from the global volatile array."""
+    from repro.core.arena import open_arena
+    from repro.pstruct import dll as DL
+
+    a = open_arena(None, DL.DoublyLinkedList.layout(256), n_shards=4)
+    d = DL.DoublyLinkedList(a, 256)
+    rng = np.random.default_rng(3)
+    ids = d.append_batch(rng.integers(0, 9, (180, 7)).astype(np.int64))
+    d.delete_batch(ids[30:60])
+    a.commit()
+    region = a.regions["dll.nodes"]
+    packed = np.concatenate([
+        sl._pview()[:, DL.DATA_WORDS] for sl in region.slices
+        if sl is not None])
+    segments = np.cumsum([0] + [0 if sl is None else sl.shape[0]
+                                for sl in region.slices])
+    got = chain_order.chain_order_device(
+        packed, d.head, segments=segments, seg_rows=DL.SHARD_SEG,
+        interpret=True)
+    np.testing.assert_array_equal(got, d.to_list())
+
+
 # --------------------------------------- chain primitive edge cases
 
 

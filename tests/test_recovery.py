@@ -11,6 +11,8 @@
   must recover it for the count-bounded structures (DLL, Hashmap) and a
   valid superset state for the in-place-rewriting B+Tree.
 """
+import os
+
 import numpy as np
 import pytest
 
@@ -193,11 +195,14 @@ def test_manager_reports_uncommitted_arena_invalid(rng):
 
 
 def _mixed_arena(mode):
+    # REPRO_N_SHARDS reruns the torn-epoch sweep on a sharded substrate
+    # (the CI matrix axis, DESIGN.md §7)
     layout = {}
     layout.update(DoublyLinkedList.layout(256, mode, name="dll"))
     layout.update(BPTree.layout(256, 1024, mode, name="bt"))
     layout.update(Hashmap.layout(512, mode, name="hm"))
-    a = open_arena(None, layout)
+    a = open_arena(None, layout,
+                   n_shards=int(os.environ.get("REPRO_N_SHARDS", "1")))
     return (a, DoublyLinkedList(a, 256, mode, name="dll"),
             BPTree(a, 256, 1024, mode, name="bt"),
             Hashmap(a, 512, mode, name="hm"))
