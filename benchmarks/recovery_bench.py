@@ -18,13 +18,19 @@ subsystem (core/recovery.py):
   the report's wall/critical-path/summed-stage triple;
 * checkpoint-restore APPROXIMABLE warmup: inline vs background
   (§V-F-style warmup-time metric next to reconstruction time);
-* the vectorized chain-order primitive vs the seed's scalar NEXT walk
-  at >= 100k entries (the pointer-doubling speedup every recovery path
-  now rides on).
+* the vectorized chain-order primitives vs the seed's scalar NEXT walk
+  at >= 100k entries — a contraction-vs-doubling-vs-scalar sweep per
+  size (the 10**6 point is the jump-table cache crossover that
+  contraction list ranking exists to clear; the full-mode gate asserts
+  the auto path beats scalar at EVERY measured size, and all three
+  orders are asserted bit-identical on every chain).
 
 Emits BENCH_recovery.json next to the repo root (CI artifact).
 
 Run: ``PYTHONPATH=src python -m benchmarks.recovery_bench [--quick]``
+``--chain-crossover`` runs ONLY the 10**6 chain point with quick-grade
+repeats and fails on speedup <= 1.0 — the CI step that keeps the
+crossover regression from silently returning.
 """
 from __future__ import annotations
 
@@ -38,7 +44,7 @@ import numpy as np
 
 from benchmarks.common import fmt_table, make_structure
 from repro.core.arena import open_arena
-from repro.core.recovery import RecoveryManager, chain_order
+from repro.core.recovery import RecoveryManager, chain_method, chain_order
 from repro.pstruct.bptree import BPTree
 from repro.pstruct.dll import DoublyLinkedList
 from repro.pstruct.hashmap import Hashmap
@@ -359,6 +365,10 @@ def _scalar_order(nxt: np.ndarray, head: int, count: int) -> np.ndarray:
 
 
 def chain_row(n: int, repeats: int = 3) -> Dict:
+    """One contraction-vs-doubling-vs-scalar sweep row.  All three
+    orders must be bit-identical (asserted here, every run); `vector_s`
+    / `speedup` stay the AUTO path's numbers for continuity with the
+    pre-contraction JSON."""
     rng = np.random.default_rng(0)
     perm = rng.permutation(n)
     nxt = np.full(n, -1, np.int64)
@@ -367,13 +377,25 @@ def chain_row(n: int, repeats: int = 3) -> Dict:
     want = _scalar_order(nxt, head, n)     # warm (page in nxt)
     scalar_s = min(_timed(lambda: _scalar_order(nxt, head, n))
                    for _ in range(repeats))
-    chain_order(nxt, head, n)              # warm
-    vector_s = min(_timed(lambda: chain_order(nxt, head, n))
-                   for _ in range(repeats))
-    np.testing.assert_array_equal(chain_order(nxt, head, n), want)
-    return {"n": n, "scalar_s": round(scalar_s, 6),
+    secs = {}
+    for method in ("double", "contract"):
+        got = chain_order(nxt, head, n, method=method)
+        np.testing.assert_array_equal(got, want)   # bit-identical, warm
+        secs[method] = min(
+            _timed(lambda m=method: chain_order(nxt, head, n, method=m))
+            for _ in range(repeats))
+    auto = chain_method(n, n)
+    vector_s = secs[auto]
+    return {"n": n, "method": auto,
+            "scalar_s": round(scalar_s, 6),
+            "double_s": round(secs["double"], 6),
+            "contract_s": round(secs["contract"], 6),
             "vector_s": round(vector_s, 6),
-            "speedup": round(scalar_s / max(vector_s, 1e-9), 2)}
+            "speedup": round(scalar_s / max(vector_s, 1e-9), 2),
+            "speedup_double": round(
+                scalar_s / max(secs["double"], 1e-9), 2),
+            "speedup_contract": round(
+                scalar_s / max(secs["contract"], 1e-9), 2)}
 
 
 def _timed(fn) -> float:
@@ -388,8 +410,26 @@ def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--no-engine", action="store_true")
+    ap.add_argument("--chain-crossover", action="store_true",
+                    help="run ONLY the 10**6 chain point (quick-grade "
+                         "repeats) and fail on speedup <= 1.0 — the CI "
+                         "crossover gate")
     ap.add_argument("--out", default="BENCH_recovery.json")
     args = ap.parse_args()
+    if args.chain_crossover:
+        c = chain_row(1_000_000, repeats=2)
+        print(f"chain crossover @ {c['n']}: scalar {c['scalar_s']}s, "
+              f"double {c['double_s']}s ({c['speedup_double']}x), "
+              f"contract {c['contract_s']}s ({c['speedup_contract']}x) "
+              f"-> auto={c['method']} {c['speedup']}x")
+        # the whole point of the contraction path: the auto primitive
+        # must clear the jump-table cache crossover at 10**6.  The
+        # contraction margin is large (~5x on the reference host), so
+        # this gate holds even on contended CI runners where the ~1.1x
+        # doubling wins would flake.
+        assert c["method"] == "contract", c
+        assert c["speedup"] > 1.0, c
+        return 0
     sizes = [2000, 8000] if args.quick else [10000, 100000]
     chain_sizes = [100000] if args.quick else [100000, 250000, 1000000]
     # concurrency pays for its thread pool only once the per-stage numpy
@@ -424,7 +464,9 @@ def main() -> int:
     chain = [chain_row(n) for n in chain_sizes]
     for c in chain:
         print(f"chain_order @ {c['n']}: scalar {c['scalar_s']}s, "
-              f"vectorized {c['vector_s']}s -> {c['speedup']}x")
+              f"double {c['double_s']}s ({c['speedup_double']}x), "
+              f"contract {c['contract_s']}s ({c['speedup_contract']}x) "
+              f"-> auto={c['method']} {c['speedup']}x")
 
     engine = None
     if not args.no_engine:
@@ -452,13 +494,17 @@ def main() -> int:
                    "chain_order": chain, "engine": engine,
                    "ckpt_warmup": ckpt}, f, indent=1)
     print(f"-> {args.out}")
-    # the vectorized primitive must beat the seed scalar walk at >=100k
-    # entries (larger sizes are reported as measured — the 10**6 point
-    # sits near the jump-table cache crossover on small hosts).  Quick
-    # (CI smoke) mode records without asserting: on a contended shared
-    # runner the ~2x win can measure near 1.0 and would flake the build.
+    # the auto chain primitive must beat the seed scalar walk at EVERY
+    # measured size — doubling carries the 100k point and contraction
+    # list ranking clears the 10**6 jump-table cache crossover the
+    # pre-contraction sweep reported honestly as <1x.  Quick (CI smoke)
+    # mode records without asserting: on a contended shared runner the
+    # ~1.5x doubling win can measure near 1.0 and would flake the build
+    # (the dedicated --chain-crossover step gates the wide-margin 10**6
+    # point instead).
     if not args.quick:
-        assert chain[0]["n"] >= 100000 and chain[0]["speedup"] > 1.0, chain
+        for c in chain:
+            assert c["speedup"] > 1.0, c
         # concurrent recovery must not lose to serial at any measured
         # size (same flake caveat as above for quick/CI mode)
         for c in conc:

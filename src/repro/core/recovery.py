@@ -8,10 +8,19 @@ every crash-recovery path (pstruct structures, the serving engine, the
 paged-KV allocator, the checkpoint manager) routes through it:
 
 * ``chain_order`` / ``chain_lengths`` / ``chain_walk`` — shared vectorized
-  pointer-jumping primitives (NumPy pointer-doubling; a Pallas variant
-  lives in ``kernels/chain_order.py``).  They replace the per-structure
-  scalar ``while cur != NULL`` walks: recovery of a million-entry
-  structure runs at hardware speed, not at Python-loop speed.
+  pointer-jumping primitives (NumPy; Pallas variants live in
+  ``kernels/chain_order.py``).  They replace the per-structure scalar
+  ``while cur != NULL`` walks: recovery of a million-entry structure
+  runs at hardware speed, not at Python-loop speed.  Two strategies sit
+  behind one ``method=`` switch (DESIGN.md §8): pointer DOUBLING
+  (binary-lifting tables, O(N log N), unbeatable while the tables fit
+  in cache) and contraction-based LIST RANKING (sample every k-th row
+  as a spine node, local-walk each spine segment, rank the ~N/k
+  contracted chain with the same doubling tables, expand — O(N) gathers
+  plus an O(N/k·log(N/k)) in-cache rank, which is what keeps the 10**6+
+  chains of the north-star serving workload off the jump-table cache
+  cliff).  ``method="auto"`` picks doubling below ``CONTRACT_MIN_N``
+  and contraction at or above it.
 * ``RecoveryManager`` — structures register their *pure* reconstructors
   (``core/reconstruct.py`` registry) under a name with declared
   dependencies (e.g. the serving engine depends on the request hashmap
@@ -59,8 +68,43 @@ NULL = -1
 
 __all__ = [
     "NULL", "chain_order", "chain_lengths", "chain_walk", "jump_tables",
+    "chain_method", "CONTRACT_K", "CONTRACT_MIN_N", "CONTRACT_MIN_COUNT",
     "StageReport", "RecoveryReport", "Recoverable", "RecoveryManager",
 ]
+
+# ----------------------------------------------------------------------
+# Method selection (DESIGN.md §8).  Doubling's working set is its
+# (bits, n) jump tables — past the cache it loses even to the scalar
+# walk (the BENCH_recovery.json crossover this module used to report
+# honestly at 10**6).  Contraction's working set is the ~n/k contracted
+# chain; its full-array passes are O(n) total gathers, so it scales
+# through the crossover.  The threshold is the measured flip point on
+# the reference host (contraction wins from ~10**5 up; doubling keeps a
+# small edge below, where its tables still fit and its fixed costs are
+# lower), and CONTRACT_MIN_COUNT keeps tiny explicit-count walks — a
+# handful of table levels — on the doubling path.
+CONTRACT_K = 32              # spine sampling stride (id % k == 0)
+CONTRACT_MIN_N = 1 << 17     # auto: contract at/above this table size
+CONTRACT_MIN_COUNT = 32      # auto: explicit counts below stay doubling
+_CONTRACT_WALK_HEADS = 64    # chain_walk: contract only for few heads
+_WALK_ESCALATE_ROUNDS = 128  # chain_walk auto: level-sync rounds before
+                             # escalating to contraction (chains proven
+                             # longer than this pay the restart; short
+                             # ones — the hashmap unlink — never do)
+
+
+def chain_method(n: int, count: Optional[int] = None,
+                 method: str = "auto") -> str:
+    """Resolve a chain-primitive ``method=`` argument to "double" or
+    "contract" (the auto heuristic, exported so recovery reports can
+    name the path a rebuild actually took)."""
+    if method != "auto":
+        if method not in ("double", "contract"):
+            raise ValueError(f"unknown chain method {method!r}")
+        return method
+    if n >= CONTRACT_MIN_N and (count is None or count >= CONTRACT_MIN_COUNT):
+        return "contract"
+    return "double"
 
 
 # ======================================================================
@@ -88,24 +132,25 @@ def jump_tables(nxt: np.ndarray, bits: int) -> np.ndarray:
     return jump
 
 
-def chain_lengths(nxt: np.ndarray, heads: np.ndarray) -> np.ndarray:
-    """Length of the NULL-terminated chain starting at each head.
-
-    Pointer doubling keeps the invariant (after k rounds):
-    ``jump[i]`` = node min(2**k, L(i)) hops after i (NULL once the chain
-    ran out), ``cnt[i]`` = min(2**k, L(i)), where L(i) counts the nodes
-    from i to the NULL terminator.  O(n log n) work, fully vectorized —
-    the parallel analogue of the seed's sequential ``_chain_len`` walk.
-    Raises on cycles (a cycle never absorbs into NULL, so its count
-    exceeds n)."""
-    heads = np.asarray(heads, np.int64)
+def _sanitize32(nxt: np.ndarray) -> np.ndarray:
+    """OOB pointers -> NULL, narrowed to int32 AFTER the 64-bit range
+    check (a torn 2**32+3 must terminate, not alias node 3).  int32
+    halves the bytes every random gather touches."""
     n = nxt.shape[0]
-    if n == 0 or heads.size == 0:
-        return np.zeros(heads.shape, np.int64)
-    # out-of-range pointers terminate (see jump_tables); int32 working
-    # arrays for the same cache reasons as jump_tables
-    jump = np.where((nxt >= 0) & (nxt < n), nxt, NULL).astype(np.int32)
-    cnt = np.ones(n, np.int32)
+    return np.where((nxt >= 0) & (nxt < n), nxt, NULL).astype(np.int32)
+
+
+def _absorb(jump: np.ndarray, cnt: np.ndarray,
+            heads: np.ndarray) -> np.ndarray:
+    """Pointer-doubling absorb: after r rounds ``jump[i]`` = node
+    min(2**r, L(i)) hops after i (NULL once the chain ran out) and
+    ``cnt[i]`` = the counts of those nodes summed, so 2**rounds > n
+    rounds yield exact chain totals.  Seeding ``cnt`` with ones counts
+    nodes (chain_lengths); seeding it with segment weights sums a
+    contracted chain's hop counts (the list-ranking rank step).  Raises
+    on a cycle reachable from ``heads`` (it never absorbs).  Pure:
+    every round rebinds, the caller's arrays are never written."""
+    n = jump.shape[0]
     for _ in range(max(1, int(n).bit_length())):   # 2**rounds > n
         live = jump >= 0
         if not live.any():
@@ -113,27 +158,62 @@ def chain_lengths(nxt: np.ndarray, heads: np.ndarray) -> np.ndarray:
         safe = np.where(live, jump, 0)
         cnt = cnt + np.where(live, cnt[safe], 0)
         jump = np.where(live, jump[safe], NULL)
+    if (jump[heads] >= 0).any():
+        raise RuntimeError("cycle in chain")
+    return cnt[heads]
+
+
+def chain_lengths(nxt: np.ndarray, heads: np.ndarray, *,
+                  method: str = "auto",
+                  k: Optional[int] = None) -> np.ndarray:
+    """Length of the NULL-terminated chain starting at each head.
+
+    Doubling: the `_absorb` invariant over the full array, O(n log n)
+    work, fully vectorized — the parallel analogue of the seed's
+    sequential ``_chain_len`` walk.  Contraction: local-walk the ~n/k
+    spine segments (every head is promoted to a spine node), then
+    `_absorb` the contracted chain seeded with segment weights —
+    O(n) gathers + an in-cache rank.  Both raise on cycles (a cycle
+    never absorbs into NULL, so its count exceeds n)."""
+    heads = np.asarray(heads, np.int64)
+    n = nxt.shape[0]
+    if n == 0 or heads.size == 0:
+        return np.zeros(heads.shape, np.int64)
+    out = np.zeros(heads.shape, np.int64)
     # heads outside [0, n) are terminated chains (length 0), per the
     # module-wide OOB-pointer contract
     ok = (heads >= 0) & (heads < n)
-    if (jump[heads[ok]] >= 0).any():
-        raise RuntimeError("cycle in chain")
-    out = np.zeros(heads.shape, np.int64)
-    out[ok] = cnt[heads[ok]]
+    if chain_method(n, None, method) == "contract":
+        nxt32 = _sanitize32(np.asarray(nxt))
+        spine, spine_pos, cnext, w = _contract(nxt32, heads[ok],
+                                               k or CONTRACT_K)
+        lens = _absorb(cnext, w, spine_pos[heads[ok]])
+        if (lens > n).any():
+            # a poisoned (spine-free-cycle) segment on some head's chain
+            raise RuntimeError("cycle in chain")
+        out[ok] = lens
+        return out
+    # int32 working arrays for the same cache reasons as jump_tables
+    jump = _sanitize32(np.asarray(nxt))
+    out[ok] = _absorb(jump, np.ones(n, np.int32), heads[ok])
     return out
 
 
-def chain_order(nxt: np.ndarray, head: int,
-                count: Optional[int] = None) -> np.ndarray:
-    """node-at-position for positions 0..count-1 via binary lifting.
+def chain_order(nxt: np.ndarray, head: int, count: Optional[int] = None,
+                *, method: str = "auto",
+                k: Optional[int] = None) -> np.ndarray:
+    """node-at-position for positions 0..count-1.
 
-    ``count=None`` derives the length from the same jump tables the
-    position walk uses (one lifting descent from the top bit — no second
-    doubling pass — with cycle detection); recovery paths that persist
-    an explicit count (the DLL header) pass it instead — a
-    stale-but-committed count then bounds the walk to the committed
-    prefix, which is exactly the torn-epoch recovery guarantee.
-    O(N log N) work, fully vectorized.
+    ``count=None`` derives the length first (one lifting descent off the
+    doubling tables, or the contracted rank — cycle-detected either
+    way); recovery paths that persist an explicit count (the DLL header)
+    pass it instead — a stale-but-committed count then bounds the walk
+    to the committed prefix, which is exactly the torn-epoch recovery
+    guarantee.
+
+    ``method`` — "double" (binary lifting, O(N log N) fully vectorized),
+    "contract" (sample/contract/rank/expand list ranking, O(N) gathers +
+    an O(N/k log(N/k)) in-cache rank), or "auto" (`chain_method`).
 
     A head outside [0, n) — NULL, or a HEAD field flushed by a torn
     epoch past the committed fresh-water mark — is a terminated chain:
@@ -141,35 +221,42 @@ def chain_order(nxt: np.ndarray, head: int,
     n = nxt.shape[0]
     if head < 0 or head >= n:
         return np.empty(0, np.int64)
+    if count == 0:
+        return np.empty(0, np.int64)
+    if chain_method(n, count, method) == "contract":
+        return _order_contract(np.asarray(nxt), head, count,
+                               k or CONTRACT_K)
     if count is None:
-        # build tables deep enough to absorb any valid chain, then read
-        # the length off them: descend from the top bit, taking every
-        # jump that does not absorb — the hop count is the tail position
+        # tables deep enough to absorb any valid chain; the length
+        # derivation below and the position walk share this ONE build
         bits = max(1, int(n).bit_length())       # 2**bits > n
-        jump = jump_tables(np.asarray(nxt, np.int64), bits)
+    else:
+        bits = max(1, int(np.ceil(np.log2(max(count, 2)))))
+    jump = jump_tables(np.asarray(nxt, np.int64), bits)
+    if count is None:
+        # read the length off the tables: descend from the top bit,
+        # taking every jump that does not absorb — the hop count is the
+        # tail position
         cur, tail_pos = head, 0
-        for k in reversed(range(bits)):
-            nk = int(jump[k][cur])
-            if nk != NULL:
-                tail_pos += 1 << k
-                cur = nk
+        for b in reversed(range(bits)):
+            nb = int(jump[b][cur])
+            if nb != NULL:
+                tail_pos += 1 << b
+                cur = nb
         count = tail_pos + 1
         if count > n:
             raise RuntimeError("cycle in chain")
-    else:
-        if count == 0:
-            return np.empty(0, np.int64)
-        bits = max(1, int(np.ceil(np.log2(max(count, 2)))))
-        jump = jump_tables(np.asarray(nxt, np.int64), bits)
     # int32 throughout the position walk (row ids < 2**31): mixed-dtype
-    # masked gathers cost ~3x at 10**6 entries
+    # masked gathers cost ~3x at 10**6 entries.  Only the low
+    # (count-1).bit_length() table levels can set a position bit, so the
+    # walk skips the deeper levels a count=None derivation built.
     pos = np.arange(count, dtype=np.int32)
     cur = np.full(count, head, np.int32)
     dead = np.zeros(count, bool)   # absorbed into NULL: count overran
-    for k in range(bits):
-        m = ((pos >> k) & 1 == 1) & ~dead
+    for b in range(min(bits, int(count - 1).bit_length())):
+        m = ((pos >> b) & 1 == 1) & ~dead
         if m.any():
-            cur[m] = jump[k][cur[m]]
+            cur[m] = jump[b][cur[m]]
             dead |= cur == NULL
     if dead.any():
         # an explicit count larger than the chain: fail loudly instead
@@ -178,19 +265,38 @@ def chain_order(nxt: np.ndarray, head: int,
     return cur.astype(np.int64)
 
 
-def chain_walk(nxt: np.ndarray, heads: np.ndarray) -> np.ndarray:
+def chain_walk(nxt: np.ndarray, heads: np.ndarray, *,
+               method: str = "auto",
+               k: Optional[int] = None) -> np.ndarray:
     """Materialize many chains at once: (H, Lmax) member matrix, row h =
     nodes of the chain starting at heads[h] in order, NULL-padded.
 
-    Level-synchronous — one vectorized round per chain *position*, all
-    chains advanced together (the batched-probe idiom from
-    hashmap._find_slots), so rounds = max chain length, not total
-    nodes."""
+    Level-synchronous by default — one vectorized round per chain
+    *position*, all chains advanced together (the batched-probe idiom
+    from hashmap._find_slots), so rounds = max chain length, not total
+    nodes.  That is the right shape for many short chains (the hashmap's
+    bucket unlink); for a FEW chains over a huge table (rounds = chain
+    length, each round a tiny gather) the contraction path ranks all
+    chains off one shared contraction instead.  "auto" ESCALATES rather
+    than guesses — chain length isn't knowable up front, and routing a
+    short-chain unlink on a big table to contraction's O(n) passes
+    would regress the serving hot path — so it walks level-sync and
+    restarts on the contraction path only once the chains have proven
+    longer than _WALK_ESCALATE_ROUNDS (the discarded rounds are a few
+    tiny gathers; the escalated case saves full-chain-length rounds)."""
     heads = np.asarray(heads, np.int64)
     n = nxt.shape[0]
+    if method != "auto":
+        method = chain_method(n, None, method)   # validates the string
+    if method == "contract":
+        return _walk_contract(np.asarray(nxt), heads, k or CONTRACT_K)
+    escalate = (method == "auto" and n >= CONTRACT_MIN_N
+                and 0 < heads.size <= _CONTRACT_WALK_HEADS)
     cols: List[np.ndarray] = []
     cur = np.where((heads >= 0) & (heads < n), heads, NULL)
     while (cur != NULL).any():
+        if escalate and len(cols) >= _WALK_ESCALATE_ROUNDS:
+            return _walk_contract(np.asarray(nxt), heads, k or CONTRACT_K)
         cols.append(cur.copy())
         safe = np.where(cur != NULL, cur, 0)
         cur = np.where(cur != NULL, nxt[safe], NULL)
@@ -200,6 +306,164 @@ def chain_walk(nxt: np.ndarray, heads: np.ndarray) -> np.ndarray:
     if not cols:
         return np.empty((heads.shape[0], 0), np.int64)
     return np.stack(cols, axis=1)
+
+
+# ======================================================================
+# Contraction-based list ranking (sample / contract / rank / expand)
+# ======================================================================
+
+def _contract(nxt32: np.ndarray, extra_heads: np.ndarray, k: int
+              ) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    """Sample + local-walk steps of the list ranking (DESIGN.md §8).
+
+    Spine nodes are every row with ``id % k == 0`` plus every in-range
+    head (deterministic — no RNG in a recovery path, and the device
+    variant can test membership with arithmetic alone).  Each spine
+    node's SEGMENT is itself plus the non-spine nodes after it, up to
+    the next spine node or the chain end; the local walk advances all
+    segments together, retiring lanes as they arrive (compacted each
+    round, so total gather work is O(n) — the sum of segment lengths —
+    not rounds x lanes).
+
+    Returns ``(spine, spine_pos, cnext, w)``: spine row ids, the (n,)
+    id -> spine-index map (NULL off-spine), the contracted next pointer
+    (spine-index space, NULL-terminated) and the segment weights
+    (nodes per segment).  A cycle that contains a spine node shows up
+    as a cycle in ``cnext`` (the rank step detects it); a spine-FREE
+    cycle would spin the local walk forever, so after n rounds the
+    stuck lanes are closed with a POISON weight of n+1 — any length
+    summed through them exceeds n, which is exactly the condition the
+    callers already treat as "cycle in chain".  Walks that never need
+    the poisoned segment (an explicit committed count that stops short
+    of torn territory) stay unaffected, matching the doubling path."""
+    n = nxt32.shape[0]
+    spine = np.arange(0, n, k, dtype=np.int64)
+    extra = extra_heads[(extra_heads >= 0) & (extra_heads < n)]
+    extra = np.unique(extra[extra % k != 0])
+    if extra.size:
+        spine = np.concatenate([spine, extra])
+    S = spine.size
+    spine_pos = np.full(n, NULL, np.int32)
+    spine_pos[spine] = np.arange(S, dtype=np.int32)
+    cnext = np.full(S, NULL, np.int32)
+    w = np.ones(S, np.int64)
+    lanes = np.arange(S)
+    cur = nxt32[spine]
+    for _ in range(n + 1):       # a legit segment closes within n hops
+        if not lanes.size:
+            break
+        alive = cur >= 0
+        sp = np.full(lanes.size, NULL, np.int32)
+        sp[alive] = spine_pos[cur[alive]]
+        arrived = sp >= 0
+        if arrived.any():
+            cnext[lanes[arrived]] = sp[arrived]
+        keep = alive & ~arrived
+        lanes = lanes[keep]
+        cur = cur[keep]
+        if lanes.size:
+            w[lanes] += 1
+            cur = nxt32[cur]
+    if lanes.size:               # spine-free cycle: poison, don't raise
+        w[lanes] = n + 1
+    return spine, spine_pos, cnext, w
+
+
+def _rank_expand(nxt32: np.ndarray, spine: np.ndarray, cjump: np.ndarray,
+                 w: np.ndarray, hpos: int, count: int) -> np.ndarray:
+    """Rank + expand steps: order of the chain starting at spine index
+    ``hpos``, positions 0..count-1.
+
+    Rank: ``cjump`` — the EXISTING binary-lifting tables, built ONCE by
+    the caller over the contracted chain (a (bits, S) working set that
+    stays in cache, shared across heads in the multi-head walk) — walks
+    spine-at-contracted-position exactly like chain_order's position
+    walk; the exclusive cumsum of segment weights turns contracted
+    positions into global start positions.  Expand: re-walk only the
+    segments whose start lands inside [0, count) — emitting straight
+    into the output, so total work is count gathers + count scatters."""
+    S = cjump.shape[1]
+    cap = min(count, S)
+    pos = np.arange(cap, dtype=np.int32)
+    curq = np.full(cap, hpos, np.int32)
+    dead = np.zeros(cap, bool)
+    for b in range(min(cjump.shape[0], int(cap - 1).bit_length())):
+        m = ((pos >> b) & 1 == 1) & ~dead
+        if m.any():
+            curq[m] = cjump[b][curq[m]]
+            dead |= curq == NULL
+    wq = np.where(dead, 0, w[np.where(dead, 0, curq)])
+    g = np.concatenate([[0], np.cumsum(wq)[:-1]])   # global start of q
+    use = ~dead & (g < count)
+    starts = g[use]
+    take = np.minimum(wq[use], count - starts)
+    if int(take.sum()) != count:
+        # the contracted chain ran out before covering count positions —
+        # same contract as the doubling walk's dead check
+        raise ValueError("count exceeds chain length")
+    out = np.empty(count, np.int64)
+    cur = spine[curq[use]].astype(np.int32)
+    posn = starts.copy()
+    rem = take.copy()
+    while cur.size:
+        out[posn] = cur
+        rem -= 1
+        kp = rem > 0
+        cur = nxt32[cur[kp]]
+        posn = posn[kp] + 1
+        rem = rem[kp]
+    return out
+
+
+def _order_contract(nxt: np.ndarray, head: int, count: Optional[int],
+                    k: int) -> np.ndarray:
+    """chain_order via contraction: the full sample / contract / rank /
+    expand pipeline for one head (head already validated in-range)."""
+    n = nxt.shape[0]
+    nxt32 = _sanitize32(nxt)
+    spine, spine_pos, cnext, w = _contract(
+        nxt32, np.asarray([head], np.int64), k)
+    hpos = int(spine_pos[head])
+    if count is None:
+        count = int(_absorb(cnext, w, np.asarray([hpos]))[0])
+        if count > n:
+            raise RuntimeError("cycle in chain")
+    cjump = _contract_tables(cnext, min(count, spine.shape[0]))
+    return _rank_expand(nxt32, spine, cjump, w, hpos, count)
+
+
+def _contract_tables(cnext: np.ndarray, cap: int) -> np.ndarray:
+    """Binary-lifting tables over the contracted chain, deep enough for
+    a position walk of ``cap`` contracted positions."""
+    bits = max(1, int(np.ceil(np.log2(max(cap, 2)))))
+    return jump_tables(cnext.astype(np.int64), bits)
+
+
+def _walk_contract(nxt: np.ndarray, heads: np.ndarray,
+                   k: int) -> np.ndarray:
+    """chain_walk via ONE shared contraction: every head is a spine
+    node, so each chain's rank+expand reads the same contracted tables
+    (built once, deep enough for the longest chain); the per-head
+    Python loop runs over the FEW heads this path is selected for,
+    each iteration fully vectorized."""
+    n = nxt.shape[0]
+    nxt32 = _sanitize32(nxt)
+    spine, spine_pos, cnext, w = _contract(nxt32, heads, k)
+    ok = (heads >= 0) & (heads < n)
+    lens = np.zeros(heads.shape, np.int64)
+    lens[ok] = _absorb(cnext, w, spine_pos[heads[ok]])
+    if (lens > n).any():
+        raise RuntimeError("cycle in chain")
+    lmax = int(lens.max()) if lens.size else 0
+    out = np.full((heads.shape[0], lmax), NULL, np.int64)
+    if lmax:
+        cjump = _contract_tables(cnext, min(lmax, spine.shape[0]))
+        for h in range(heads.shape[0]):
+            if lens[h]:
+                out[h, :lens[h]] = _rank_expand(
+                    nxt32, spine, cjump, w,
+                    int(spine_pos[heads[h]]), int(lens[h]))
+    return out
 
 
 # ======================================================================

@@ -1,16 +1,29 @@
-"""chain_order — pointer-doubling chain reconstruction Pallas kernel.
+"""chain_order — chain-reconstruction Pallas kernels (doubling +
+contraction list ranking).
 
-Device-side variant of the recovery layer's shared chain primitive
-(core/recovery.py): one `jump_double` call advances every node's jump
-pointer by its own current distance (jump' = jump[jump], NULL-absorbing)
-and accumulates the hop count, so log2(N) rounds resolve the order/length
-of a NULL-terminated chain — the §V-F reconstruction walk at hardware
-speed instead of Python-loop speed.
+Device-side variant of the recovery layer's shared chain primitives
+(core/recovery.py).  Two paths behind ``chain_order_device(method=)``:
+
+* DOUBLING — one `jump_double` call advances every node's jump pointer
+  by its own current distance (jump' = jump[jump], NULL-absorbing) and
+  accumulates the hop count, so log2(N) rounds resolve the order/length
+  of a NULL-terminated chain — the §V-F reconstruction walk at hardware
+  speed instead of Python-loop speed.
+* CONTRACTION (DESIGN.md §8) — sample every k-th row as a spine node
+  (deterministic ``id % k == 0``, so membership is arithmetic — no
+  lookup table on device), local-walk the spine segments with
+  `gather_next` rounds (total gathers O(N): lanes retire as segments
+  close), rank the ~N/k contracted chain with the SAME `jump_double`
+  tables — now an in-cache working set — and expand ranks back through
+  a second pass of `gather_next` rounds.  This is what keeps 10**6+
+  chain recovery off the jump-table cache cliff; ``method="auto"``
+  defers to the shared `core.recovery.chain_method` heuristic.
 
 TPU adaptation (same dynamic-gather pattern as pack_flush/hash_probe):
-pointer chasing doesn't vectorize as lane ops, so the per-node gather
-``jump[jump[i]]`` is steered by the *scalar-prefetched* jump array in the
-BlockSpec index_map; the kernel body only masks the NULL-absorbed lanes.
+pointer chasing doesn't vectorize as lane ops, so the per-node gathers
+``jump[jump[i]]`` / ``nxt[cur[i]]`` are steered by the
+*scalar-prefetched* pointer array in the BlockSpec index_map; the kernel
+bodies only mask the NULL-absorbed lanes.
 
 Sharded arenas (DESIGN.md §7) add a ``segments`` offset argument: a
 sharded region's NEXT column arrives as N per-shard views concatenated
@@ -31,6 +44,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.recovery import CONTRACT_K, chain_method
 
 NULL = -1
 
@@ -118,6 +133,59 @@ def jump_double(jump: jax.Array, cnt: jax.Array, *,
     return j2[:, 0], c2[:, 0]
 
 
+def _gather_kernel(steer_ref, val_at_ref, out):
+    """One chain hop for lane i = program_id(0): the val block is
+    steered to row steer[i] (clamped to 0 when the lane is retired);
+    the body only masks retired lanes to NULL."""
+    i = pl.program_id(0)
+    live = steer_ref[i] >= 0
+    out[...] = jnp.where(live, val_at_ref[...], NULL)
+
+
+def gather_next(nxt: jax.Array, ids, *,
+                segments: Optional[np.ndarray] = None,
+                seg_rows: int = 0,
+                interpret: bool = True) -> jax.Array:
+    """One contraction hop for a batch of lanes: out[i] = nxt[ids[i]]
+    (NULL lanes stay NULL; out-of-range ids terminate, the shared
+    torn-epoch contract).  ``nxt`` is the sanitized (n,) int32 pointer
+    column — shard-major packed when ``segments``/``seg_rows`` are
+    given, in which case the scalar-prefetched steering is the ids'
+    packed POSITION while ids and gathered values stay global.  This is
+    the kernel the contraction local-walk and expand rounds ride: the
+    same prefetch-steered dynamic gather as `jump_double`, minus the
+    count lane."""
+    n = nxt.shape[0]
+    if isinstance(ids, np.ndarray):
+        # range-check at the caller's full width BEFORE the int32
+        # narrowing: a torn 2**32+3 must terminate, not alias node 3
+        # (jnp.asarray would truncate it silently under 32-bit jax)
+        ids = np.where((ids >= 0) & (ids < n), ids, NULL).astype(np.int32)
+    ids = jnp.asarray(ids, jnp.int32)
+    ids = jnp.where((ids >= 0) & (ids < n), ids, NULL)
+    if segments is not None:
+        steer = packed_positions(ids, seg_rows, segments).astype(jnp.int32)
+    else:
+        steer = ids
+    grid = (ids.shape[0],)
+    spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1),
+                         lambda i, p_ref: (jnp.maximum(p_ref[i], 0), 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1), lambda i, p_ref: (i, 0)),
+    )
+    out = pl.pallas_call(
+        _gather_kernel,
+        grid_spec=spec,
+        out_shape=jax.ShapeDtypeStruct((ids.shape[0], 1), jnp.int32),
+        interpret=interpret,
+    )(steer, nxt[:, None])
+    return out[:, 0]
+
+
 def chain_tables_device(nxt: np.ndarray, bits: int, *,
                         segments: Optional[np.ndarray] = None,
                         seg_rows: int = 0,
@@ -150,20 +218,31 @@ def chain_tables_device(nxt: np.ndarray, bits: int, *,
 def chain_order_device(nxt: np.ndarray, head: int, *,
                        segments: Optional[np.ndarray] = None,
                        seg_rows: int = 0,
+                       method: str = "auto",
+                       k: int = 0,
                        interpret: bool = True) -> np.ndarray:
-    """Full device-built chain order: the doubling rounds run in the
-    Pallas kernel; the final node-at-position extraction is a cheap
-    O(count log count) gather off the returned tables.  A head outside
-    [0, n) is a terminated chain (empty order) — the same OOB contract
-    as the host primitive.
+    """Full device-built chain order.  ``method`` — "double" (the
+    doubling rounds run in the Pallas kernel; the final node-at-position
+    extraction is a cheap O(count log count) gather off the returned
+    tables), "contract" (the contraction list ranking: `gather_next`
+    local-walk rounds, `jump_double` rank over the ~n/k contracted
+    chain, `gather_next` expand rounds), or "auto" — the SAME heuristic
+    as the host primitive (`core.recovery.chain_method`), so host and
+    device flip strategies at the same size.  A head outside [0, n) is
+    a terminated chain (empty order) — the same OOB contract as the
+    host primitive.
 
     ``segments``/``seg_rows`` accept the shard-major packed NEXT column
     of a sharded region (the per-shard persistent views, concatenated —
     no host re-gather); `head` and the returned order are global ids
-    either way."""
+    either way, on both methods (the contraction rank runs in
+    spine-index space, which is layout-free)."""
     n = nxt.shape[0]
     if head < 0 or head >= n:
         return np.empty(0, np.int64)
+    if chain_method(n, None, method) == "contract":
+        return _order_device_contract(nxt, head, k or CONTRACT_K,
+                                      segments, seg_rows, interpret)
 
     def pos_of(ids):
         if segments is None:
@@ -179,8 +258,115 @@ def chain_order_device(nxt: np.ndarray, head: int, *,
         raise RuntimeError("cycle in chain")
     pos = np.arange(count)
     cur = np.full(count, head, np.int64)
-    for k in range(len(tables)):
-        m = (pos >> k) & 1 == 1
+    for b in range(len(tables)):
+        m = (pos >> b) & 1 == 1
         if m.any():
-            cur[m] = tables[k][pos_of(cur[m])]
+            cur[m] = tables[b][pos_of(cur[m])]
     return cur
+
+
+def _order_device_contract(nxt: np.ndarray, head: int, k: int,
+                           segments: Optional[np.ndarray],
+                           seg_rows: int,
+                           interpret: bool) -> np.ndarray:
+    """Contraction list ranking with every chain hop in the Pallas
+    gather kernel; the host orchestrates lane bookkeeping between
+    rounds, the established chain_tables_device split.
+
+    Spine membership is pure arithmetic (``id % k == 0``, plus the one
+    promoted head), so the local walk needs no spine-position table:
+    the contracted index of global id g is ``g // k`` for sampled rows
+    and ``ceil(n/k)`` for the promoted head."""
+    # sanitize at 64-bit BEFORE the int32 narrowing (module-wide OOB
+    # contract, same as chain_tables_device)
+    nxt = np.asarray(nxt)
+    n = nxt.shape[0]
+    jnxt = jnp.asarray(np.where((nxt >= 0) & (nxt < n), nxt, NULL),
+                       jnp.int32)
+    n_mult = (n + k - 1) // k            # sampled spine rows
+    promoted = head % k != 0
+    spine = np.arange(0, n, k, dtype=np.int64)
+    if promoted:
+        spine = np.concatenate([spine, [head]])
+    S = spine.size
+
+    def spine_idx(ids):                  # global id -> spine index
+        out = np.where(ids % k == 0, ids // k, NULL)
+        if promoted:
+            out = np.where(ids == head, n_mult, out)
+        return out.astype(np.int64)
+
+    # ---- local walk: one gather_next round per segment hop, lanes
+    # retired (and compacted away) as they reach the next spine node
+    cnext = np.full(S, NULL, np.int64)
+    w = np.ones(S, np.int64)
+    lanes = np.arange(S)
+    cur = np.asarray(gather_next(jnxt, spine, segments=segments,
+                                 seg_rows=seg_rows, interpret=interpret),
+                     np.int64)
+    for _ in range(n + 1):
+        if not lanes.size:
+            break
+        sp = np.where(cur >= 0, spine_idx(np.maximum(cur, 0)), NULL)
+        arrived = sp >= 0
+        if arrived.any():
+            cnext[lanes[arrived]] = sp[arrived]
+        keep = (cur >= 0) & ~arrived
+        lanes = lanes[keep]
+        if lanes.size:
+            w[lanes] += 1
+            cur = np.asarray(gather_next(jnxt, cur[keep],
+                                         segments=segments,
+                                         seg_rows=seg_rows,
+                                         interpret=interpret), np.int64)
+    if lanes.size:                       # spine-free cycle: poison
+        w[lanes] = n + 1
+
+    # ---- rank the contracted chain with the existing doubling tables
+    # (spine-index space: dense, layout-free, in-cache) — weights seed
+    # the count lane, so counts come out as global hop totals
+    hpos = n_mult if promoted else head // k
+    bits = max(1, int(S).bit_length())
+    jq = jnp.asarray(cnext, jnp.int32)
+    cw = jnp.asarray(np.minimum(w, n + 1), jnp.int32)
+    tables = [np.asarray(jq, np.int64)]
+    for _ in range(bits):
+        jq, cw = jump_double(jq, cw, interpret=interpret)
+        tables.append(np.asarray(jq, np.int64))
+    if int(np.asarray(jq)[hpos]) != NULL:
+        raise RuntimeError("cycle in chain")   # cycle through spine nodes
+    count = int(np.asarray(cw)[hpos])
+    if count > n:
+        raise RuntimeError("cycle in chain")   # poisoned spine-free cycle
+    # contracted position walk off the tables (host, like the doubling
+    # path's extraction), then exclusive-cumsum weights -> global starts
+    cap = min(count, S)
+    posq = np.arange(cap)
+    curq = np.full(cap, hpos, np.int64)
+    dead = np.zeros(cap, bool)
+    for b in range(len(tables)):
+        m = ((posq >> b) & 1 == 1) & ~dead
+        if m.any():
+            curq[m] = tables[b][curq[m]]
+            dead |= curq == NULL
+    wq = np.where(dead, 0, w[np.where(dead, 0, curq)])
+    g = np.concatenate([[0], np.cumsum(wq)[:-1]])
+    use = ~dead & (g < count)
+
+    # ---- expand: re-walk only the used segments, emitting into out
+    out = np.empty(count, np.int64)
+    cur = spine[curq[use]]
+    posn = g[use]
+    rem = np.minimum(wq[use], count - posn)
+    while cur.size:
+        out[posn] = cur
+        rem -= 1
+        kp = rem > 0
+        if not kp.any():
+            break
+        cur = np.asarray(gather_next(jnxt, cur[kp], segments=segments,
+                                     seg_rows=seg_rows,
+                                     interpret=interpret), np.int64)
+        posn = posn[kp] + 1
+        rem = rem[kp]
+    return out

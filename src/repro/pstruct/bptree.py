@@ -35,7 +35,7 @@ import numpy as np
 
 from repro.core import reconstruct as rec
 from repro.core.arena import Arena, FlushStats
-from repro.core.recovery import chain_order
+from repro.core.recovery import chain_method, chain_order
 
 ORDER = 19
 MAX_KEYS = ORDER - 1           # 18
@@ -60,12 +60,16 @@ C_NEXT, C_PARENT = 40, 41
 
 class BPTree:
     def __init__(self, arena: Arena, cap_nodes: int, cap_records: int,
-                 mode: str = "partly", name: str = "bt"):
+                 mode: str = "partly", name: str = "bt",
+                 chain_method: str = "auto"):
         assert mode in ("partly", "full")
         self.mode = mode
         self.arena = arena
         self.cap_nodes = cap_nodes
         self.cap_records = cap_records
+        # leaf-chain ranking strategy (doubling vs contraction list
+        # ranking, core.recovery.chain_method / DESIGN.md §8)
+        self.chain_method = chain_method
         self.nodes = arena.regions.get(f"{name}.nodes") or arena.region(
             f"{name}.nodes", np.int32, (cap_nodes, 64),
             router=("seg", LEAF_RANGE))
@@ -464,7 +468,8 @@ class BPTree:
             return np.empty(0, np.int64)
         fresh = int(hv[H_FRESH_NODES])
         return chain_order(
-            self.nodes.vol[:fresh, C_NEXT].astype(np.int64), first)
+            self.nodes.vol[:fresh, C_NEXT].astype(np.int64), first,
+            method=self.chain_method)
 
     def keys_in_order(self) -> np.ndarray:
         """All keys in sorted (leaf-chain) order — one masked gather over
@@ -654,4 +659,6 @@ def _reconstruct_bptree(t: "BPTree") -> dict:
     t._free_recs = np.nonzero(
         ~rec_live[:int(hv[H_FRESH_RECS])])[0].tolist()
     return {"mode": "partly", "count": int(hv[H_COUNT]),
-            "leaves": int(leaves.size)}
+            "leaves": int(leaves.size),
+            "chain": chain_method(int(hv[H_FRESH_NODES]), None,
+                                  getattr(t, "chain_method", "auto"))}

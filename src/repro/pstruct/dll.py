@@ -31,7 +31,7 @@ import numpy as np
 
 from repro.core import reconstruct as rec
 from repro.core.arena import Arena, FlushStats
-from repro.core.recovery import chain_order
+from repro.core.recovery import chain_method, chain_order
 
 NULL = -1
 DATA_WORDS = 7
@@ -50,10 +50,15 @@ class DoublyLinkedList:
     """mode: "partly" | "full"."""
 
     def __init__(self, arena: Arena, capacity: int, mode: str = "partly",
-                 name: str = "dll"):
+                 name: str = "dll", chain_method: str = "auto"):
         assert mode in ("partly", "full")
         self.mode = mode
         self.capacity = capacity
+        # chain-ranking strategy for every NEXT-chain walk (to_list and
+        # the recovery reconstructor): "auto" flips from pointer
+        # doubling to contraction list ranking at the cache crossover
+        # (core.recovery.chain_method, DESIGN.md §8)
+        self.chain_method = chain_method
         self.arena = arena
         row = 8 if mode == "partly" else 16
         self._row = row
@@ -248,9 +253,11 @@ class DoublyLinkedList:
 
     # ------------- traversal / verification -------------
     def to_list(self) -> np.ndarray:
-        """Materialize list order from NEXT (vectorized binary lifting —
-        the shared chain_order primitive, not a scalar walk)."""
-        return chain_order(self.next, self.head, self.count)
+        """Materialize list order from NEXT (the shared chain_order
+        primitive — doubling or contraction per ``chain_method``, never
+        a scalar walk)."""
+        return chain_order(self.next, self.head, self.count,
+                           method=self.chain_method)
 
     def order(self) -> np.ndarray:
         """List order materialized from the volatile ring (no chain
@@ -299,7 +306,8 @@ def _reconstruct_dll(d: "DoublyLinkedList") -> dict:
         return {"mode": d.mode, "count": 0}
     # The committed COUNT bounds the walk: rows appended by a torn epoch
     # (data flushed, header not) stay unreachable.
-    order = chain_order(d.next, head, count)
+    method = getattr(d, "chain_method", "auto")
+    order = chain_order(d.next, head, count, method=method)
     d.prev[order[1:]] = order[:-1]
     hv[H_TAIL] = order[-1]
     live = np.zeros(d.capacity, bool)
@@ -315,7 +323,8 @@ def _reconstruct_dll(d: "DoublyLinkedList") -> dict:
     if d.mode == "full":
         d.nodes.vol[order[1:], DATA_WORDS + 1] = order[:-1]
         d.nodes.vol[order[0], DATA_WORDS + 1] = NULL
-    return {"mode": d.mode, "count": count}
+    return {"mode": d.mode, "count": count,
+            "chain": chain_method(d.capacity, count, method)}
 
 
 def order_from_next(nxt: np.ndarray, head: int, count: int) -> np.ndarray:

@@ -50,11 +50,17 @@ def hash64(keys: np.ndarray) -> np.ndarray:
 
 class Hashmap:
     def __init__(self, arena: Arena, capacity: int, mode: str = "partly",
-                 load_factor: float = 0.75, name: str = "hm"):
+                 load_factor: float = 0.75, name: str = "hm",
+                 chain_method: str = "auto"):
         assert mode in ("partly", "full")
         self.mode = mode
         self.capacity = capacity
         self.load_factor = load_factor
+        # bucket-chain walk strategy for the batched unlink ("auto"
+        # keeps the level-synchronous walk for many short chains and
+        # flips to contraction list ranking only for few chains over a
+        # huge slab — core.recovery.chain_walk, DESIGN.md §8)
+        self.chain_method = chain_method
         self.arena = arena
         row = 8 if mode == "partly" else 16
         self._row = row
@@ -247,7 +253,8 @@ class Hashmap:
         the survivors (order preserved) with two scatters."""
         hs = self.hashes[slots]
         bkts = np.unique((hs & np.uint64(self.n_buckets - 1)).astype(np.int64))
-        members = chain_walk(self.chain, self.buckets[bkts])
+        members = chain_walk(self.chain, self.buckets[bkts],
+                             method=self.chain_method)
         if members.shape[1] == 0:
             self.chain[slots] = NULL
             return

@@ -30,6 +30,11 @@ class PagedConfig:
     page_tokens: int = 64
     mode: str = "partly"
     n_shards: int = 1      # shard count of the page-metadata arena
+    # chain-ranking strategy for the LRU ring scan after a crash (the
+    # DLL reconstructor's NEXT walk): "auto" flips from pointer doubling
+    # to contraction list ranking once the page pool crosses the
+    # jump-table cache crossover (core.recovery.chain_method, §8)
+    chain_method: str = "auto"
 
 
 class PagedAllocator:
@@ -46,7 +51,8 @@ class PagedAllocator:
         layout = DoublyLinkedList.layout(cfg.n_pages, cfg.mode, name="lru")
         self.arena = open_arena(path, layout, n_shards=cfg.n_shards)
         self.lru = DoublyLinkedList(self.arena, cfg.n_pages, cfg.mode,
-                                    name="lru")
+                                    name="lru",
+                                    chain_method=cfg.chain_method)
         self.page_of_node: Dict[int, int] = {}
         self.pages_free: List[int] = list(range(cfg.n_pages))
         self.owner: np.ndarray = np.full(cfg.n_pages, -1, np.int64)

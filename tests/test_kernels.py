@@ -221,6 +221,65 @@ def test_chain_order_device_segments_from_sharded_dll():
         packed, d.head, segments=segments, seg_rows=DL.SHARD_SEG,
         interpret=True)
     np.testing.assert_array_equal(got, d.to_list())
+    # the contraction path must agree bit-for-bit on the SAME packed
+    # layout (acceptance: sharded packed layout included)
+    got_c = chain_order.chain_order_device(
+        packed, d.head, segments=segments, seg_rows=DL.SHARD_SEG,
+        method="contract", k=16, interpret=True)
+    np.testing.assert_array_equal(got_c, d.to_list())
+
+
+# ------------------------- contraction list ranking, device (§8)
+
+
+@pytest.mark.parametrize("k", [4, 32])
+def test_chain_order_device_contract_matches_host(k):
+    from repro.core.recovery import chain_order as chain_order_np
+    rng = np.random.default_rng(7)
+    n = 96
+    perm = rng.permutation(n)
+    live = perm[:71]
+    nxt = np.full(n, -1, np.int64)
+    nxt[live[:-1]] = live[1:]
+    head = int(live[0])
+    got = chain_order.chain_order_device(nxt, head, method="contract",
+                                         k=k, interpret=True)
+    np.testing.assert_array_equal(got, chain_order_np(nxt, head))
+    np.testing.assert_array_equal(got, live)
+
+
+@pytest.mark.parametrize("method", ["double", "contract"])
+def test_chain_order_device_mid_chain_cycle(method):
+    """A cycle reachable only MID-chain (head not on it) raises on both
+    device strategies: 0 -> 1 -> 2 -> 3 -> 1."""
+    nxt = np.array([1, 2, 3, 1], np.int64)
+    with pytest.raises(RuntimeError, match="cycle"):
+        chain_order.chain_order_device(nxt, 0, method=method, k=2,
+                                       interpret=True)
+
+
+def test_chain_order_device_contract_spine_free_cycle():
+    """A mid-chain cycle containing no sampled spine node: the device
+    local walk must poison the stuck segment (not spin) and still
+    surface "cycle"."""
+    nxt = np.full(16, -1, np.int64)
+    nxt[0] = 9
+    nxt[9], nxt[10], nxt[11] = 10, 11, 9     # 9/10/11 all % 8 != 0
+    with pytest.raises(RuntimeError, match="cycle"):
+        chain_order.chain_order_device(nxt, 0, method="contract", k=8,
+                                       interpret=True)
+
+
+def test_chain_order_device_contract_oob_and_empty():
+    from repro.core.recovery import chain_order as chain_order_np
+    nxt = np.array([1, 8, -1, -1], np.int64)     # 8 OOB terminates
+    got = chain_order.chain_order_device(nxt, 0, method="contract", k=2,
+                                         interpret=True)
+    np.testing.assert_array_equal(got, chain_order_np(nxt, 0))
+    assert chain_order.chain_order_device(
+        nxt, -1, method="contract", k=2, interpret=True).size == 0
+    assert chain_order.chain_order_device(
+        nxt, 99, method="contract", k=2, interpret=True).size == 0
 
 
 # --------------------------------------- chain primitive edge cases

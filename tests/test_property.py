@@ -247,6 +247,90 @@ def test_interleaved_crash_point_recovers_committed_prefix(
             assert not ok.any()
 
 
+# ------------------------------------ chain list ranking (DESIGN.md §8)
+
+def _random_chain(n, n_live, seed):
+    rng = np.random.default_rng(seed)
+    live = rng.permutation(n)[:n_live]
+    nxt = np.full(n, -1, np.int64)
+    nxt[live[:-1]] = live[1:]
+    return nxt, live
+
+
+def _scalar_order(nxt, head, count):
+    out = np.empty(count, np.int64)
+    cur = head
+    for i in range(count):
+        out[i] = cur
+        cur = int(nxt[cur])
+    return out
+
+
+@given(n=st.integers(2, 400), frac=st.floats(0.05, 1.0),
+       k=st.integers(2, 96), seed=st.integers(0, 2 ** 16))
+@settings(**SETTINGS)
+def test_chain_ranking_strategies_equivalent(n, frac, k, seed):
+    """The §8 equivalence: contraction list ranking == pointer doubling
+    == the seed's scalar walk, on random chains, for every sampling
+    stride — order (explicit and derived count), lengths, and walk."""
+    from repro.core.recovery import chain_lengths, chain_order, chain_walk
+    n_live = max(1, int(n * frac))
+    nxt, live = _random_chain(n, n_live, seed)
+    head = int(live[0])
+    want = _scalar_order(nxt, head, n_live)
+    for method in ("double", "contract"):
+        got = chain_order(nxt, head, n_live, method=method, k=k)
+        np.testing.assert_array_equal(got, want)
+        got = chain_order(nxt, head, method=method, k=k)   # derived count
+        np.testing.assert_array_equal(got, want)
+        heads = np.asarray([head, live[n_live // 2], -1, n + 3], np.int64)
+        np.testing.assert_array_equal(
+            chain_lengths(nxt, heads, method=method, k=k),
+            [n_live, n_live - n_live // 2, 0, 0])
+    np.testing.assert_array_equal(
+        chain_walk(nxt, np.asarray([head, -1]), method="contract", k=k),
+        chain_walk(nxt, np.asarray([head, -1]), method="double"))
+
+
+@given(n=st.integers(4, 40), frac=st.floats(0.3, 1.0),
+       k=st.sampled_from([2, 4, 8]), B=st.sampled_from([4, 8]),
+       seed=st.integers(0, 999))
+@settings(max_examples=6, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+def test_chain_ranking_device_matches_host_with_and_without_packing(
+        n, frac, k, B, seed):
+    """Device contraction == host primitive, on the flat layout AND the
+    sharded shard-major packed layout (global pointer values steered
+    through the closed-form packed-position translate).  Few examples:
+    interpret-mode Pallas rounds are slow, and the deterministic
+    test_kernels.py sweep already pins the edge cases."""
+    from repro.core.recovery import chain_order as chain_order_np
+    from repro.kernels import chain_order as CO
+    n_live = max(1, int(n * frac))
+    nxt, live = _random_chain(n, n_live, seed)
+    head = int(live[0])
+    want = chain_order_np(nxt, head)
+    got = CO.chain_order_device(nxt, head, method="contract", k=k,
+                                interpret=True)
+    np.testing.assert_array_equal(got, want)
+    # shard-major packed layout (DESIGN.md §7), N=3 shards
+    N = 3
+    shard_of = (np.arange(n) // B) % N
+    segments = np.zeros(N + 1, np.int64)
+    packed = np.empty(n, np.int64)
+    off = 0
+    for s in range(N):
+        g = np.nonzero(shard_of == s)[0]
+        packed[off:off + g.size] = nxt[g]
+        segments[s] = off
+        off += g.size
+    segments[N] = off
+    got = CO.chain_order_device(packed, head, segments=segments,
+                                seg_rows=B, method="contract", k=k,
+                                interpret=True)
+    np.testing.assert_array_equal(got, want)
+
+
 # ---------------------------------------------------------------- arena
 
 @given(rows=st.lists(st.integers(0, 63), min_size=1, max_size=40),

@@ -108,6 +108,121 @@ def test_chain_walk_materializes_all_chains():
     np.testing.assert_array_equal(members[2], [NULL, NULL, NULL])
 
 
+# -------------------------------------- contraction list ranking (§8)
+
+
+@pytest.mark.parametrize("method", ["double", "contract"])
+@pytest.mark.parametrize("k", [2, 3, 7, 32, 1000])
+def test_chain_order_method_parity(method, k):
+    """contraction == doubling == scalar walk, any sampling stride —
+    including k larger than the whole table (spine = heads only)."""
+    nxt, live = _random_chain(300, 211, seed=k)
+    head = int(live[0])
+    want = _scalar_order(nxt, head, 211)
+    np.testing.assert_array_equal(
+        chain_order(nxt, head, 211, method=method, k=k), want)
+    np.testing.assert_array_equal(
+        chain_order(nxt, head, method=method, k=k), want)
+    np.testing.assert_array_equal(
+        chain_lengths(nxt, np.array([head, NULL]), method=method, k=k),
+        [211, 0])
+
+
+@pytest.mark.parametrize("method", ["double", "contract"])
+def test_mid_chain_cycle_detected(method):
+    """A cycle reachable only MID-chain (the head itself is not on it)
+    must raise in both strategies: 0 -> 1 -> 2 -> 3 -> 1."""
+    nxt = np.array([1, 2, 3, 1], np.int64)
+    with pytest.raises(RuntimeError, match="cycle"):
+        chain_order(nxt, 0, method=method)
+    with pytest.raises(RuntimeError, match="cycle"):
+        chain_lengths(nxt, np.array([0]), method=method)
+    with pytest.raises(RuntimeError, match="cycle"):
+        chain_walk(nxt, np.array([0]), method=method)
+
+
+def test_mid_chain_spine_free_cycle_poisons_contract():
+    """A mid-chain cycle that contains NO spine node (all its ids are
+    off the k-stride) can't surface as a contracted-chain cycle — the
+    local walk must poison the stuck segment instead of spinning, and
+    the poisoned weight must still read as "cycle"."""
+    nxt = np.full(64, NULL, np.int64)
+    nxt[0] = 33                       # head 0 (spine) into the cycle:
+    nxt[33], nxt[34], nxt[35] = 34, 35, 33   # 33/34/35 are all % 32 != 0
+    with pytest.raises(RuntimeError, match="cycle"):
+        chain_order(nxt, 0, method="contract", k=32)
+    with pytest.raises(RuntimeError, match="cycle"):
+        chain_lengths(nxt, np.array([0]), method="contract", k=32)
+
+
+@pytest.mark.parametrize("method", ["double", "contract"])
+def test_mid_chain_cycle_beyond_committed_count_recovers_prefix(method):
+    """Torn-epoch shape: the committed prefix is a valid chain; a torn
+    NEXT beyond it loops back.  An explicit committed count must bound
+    the walk to the prefix WITHOUT tripping cycle detection — the
+    stale-count recovery guarantee, preserved by the contraction path
+    (only segments whose start lands inside [0, count) are expanded)."""
+    nxt = np.array([1, 2, 3, 4, 2, NULL], np.int64)   # 4 -> 2 re-enters
+    for count in (1, 2, 3):
+        np.testing.assert_array_equal(
+            chain_order(nxt, 0, count, method=method, k=2),
+            [0, 1, 2][:count])
+
+
+@pytest.mark.parametrize("k", [2, 4, 32])
+def test_chain_walk_contract_matches_level_sync(k):
+    rng = np.random.default_rng(k)
+    nxt = np.full(400, NULL, np.int64)
+    heads = []
+    free = rng.permutation(400)
+    at = 0
+    for ln in (1, 7, 40, 113):        # four disjoint chains
+        ids = free[at:at + ln]
+        at += ln
+        nxt[ids[:-1]] = ids[1:]
+        heads.append(int(ids[0]))
+    heads.append(NULL)
+    heads.append(999)                 # OOB head: empty row
+    want = chain_walk(nxt, np.asarray(heads), method="double")
+    got = chain_walk(nxt, np.asarray(heads), method="contract", k=k)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_chain_walk_auto_escalates_only_on_long_chains():
+    """chain_walk "auto" on a big table must not pay contraction's
+    O(n) passes for short chains (the hashmap-unlink hot path) but
+    must still rank a proven-long chain correctly after escalating."""
+    from repro.core.recovery import CONTRACT_MIN_N, _WALK_ESCALATE_ROUNDS
+    n = CONTRACT_MIN_N
+    nxt = np.full(n, NULL, np.int64)
+    rng = np.random.default_rng(0)
+    ids = rng.permutation(n)[:_WALK_ESCALATE_ROUNDS * 3]
+    nxt[ids[:-1]] = ids[1:]          # one long chain, escalates
+    short = np.asarray([int(ids[-1]), NULL])   # plus a length-1 chain
+    long_heads = np.asarray([int(ids[0])])
+    want = chain_walk(nxt, long_heads, method="contract")
+    got = chain_walk(nxt, long_heads, method="auto")
+    np.testing.assert_array_equal(got, want)
+    # short chains resolve within the escalation budget (level-sync)
+    np.testing.assert_array_equal(
+        chain_walk(nxt, short, method="auto"),
+        [[int(ids[-1])], [NULL]])
+    with pytest.raises(ValueError, match="unknown chain method"):
+        chain_walk(nxt, short, method="levelsync")
+
+
+def test_chain_method_heuristic_and_override():
+    from repro.core.recovery import (CONTRACT_MIN_COUNT, CONTRACT_MIN_N,
+                                     chain_method)
+    assert chain_method(CONTRACT_MIN_N - 1) == "double"
+    assert chain_method(CONTRACT_MIN_N) == "contract"
+    # tiny explicit counts stay on the doubling tables
+    assert chain_method(CONTRACT_MIN_N, CONTRACT_MIN_COUNT - 1) == "double"
+    assert chain_method(16, method="contract") == "contract"
+    with pytest.raises(ValueError, match="unknown chain method"):
+        chain_method(16, method="scalar")
+
+
 # ------------------------------------------------------- RecoveryManager
 
 
