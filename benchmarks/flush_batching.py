@@ -89,6 +89,7 @@ def _bptree_mixed(n_init: int, n_ops: int, batch: int, group: int,
     d = a.stats.delta(base)
     return {"lines": d.lines, "saved_lines": d.saved_lines,
             "dedup_rows": d.dedup_rows, "epochs": d.epochs,
+            "fences": d.fences,
             "per_call_lines": d.lines + d.saved_lines}
 
 
@@ -118,11 +119,14 @@ def _dll_delete(n_init: int, n_ops: int, batch: int, seed: int = 0) -> Dict:
     dd = a.stats.delta(base)
     return {"lines": dd.lines, "saved_lines": dd.saved_lines,
             "dedup_rows": dd.dedup_rows, "epochs": dd.epochs,
+            "fences": dd.fences,
             "per_call_lines": dd.lines + dd.saved_lines}
 
 
 def _sharded_flush(n_shards: int, n_init: int, n_ops: int, batch: int,
-                   group: int, synth_ns: float, seed: int = 0) -> Dict:
+                   group: int, synth_ns: float, seed: int = 0,
+                   commit_mode: str = "barrier",
+                   synth_fence_ns: float = 0.0) -> Dict:
     """Mixed 1:1 insert/delete B+Tree on an ``n_shards`` arena; returns
     the flush-phase wall (epoch drains + commits only) and the exact
     line accounting.  ``n_shards=1`` is the plain single Arena — the
@@ -131,7 +135,8 @@ def _sharded_flush(n_shards: int, n_init: int, n_ops: int, batch: int,
     capacity = n_init + n_ops + 1024
     layout = BPTree.layout(max(64, capacity // 4), capacity, "partly")
     a = open_arena(None, layout, n_shards=n_shards,
-                   synth_line_ns=synth_ns)
+                   synth_line_ns=synth_ns, commit_mode=commit_mode,
+                   synth_fence_ns=synth_fence_ns)
     t = BPTree(a, max(64, capacity // 4), capacity, "partly")
     keyspace = rng.permutation(capacity * 2).astype(np.int64)
     init_keys = keyspace[:n_init]
@@ -167,9 +172,11 @@ def _sharded_flush(n_shards: int, n_init: int, n_ops: int, batch: int,
         flush_wall += time.perf_counter() - t0
     d = a.stats.delta(base)
     a.close()    # release the shard pool + memmap handles per sweep point
-    return {"n_shards": n_shards, "flush_wall_s": round(flush_wall, 6),
+    return {"n_shards": n_shards, "commit_mode": commit_mode,
+            "flush_wall_s": round(flush_wall, 6),
             "lines": d.lines, "saved_lines": d.saved_lines,
             "dedup_rows": d.dedup_rows, "epochs": d.epochs,
+            "fences": d.fences,
             "lines_per_s": int(d.lines / max(flush_wall, 1e-9))}
 
 
@@ -197,6 +204,47 @@ def sharded_sweep(n_init: int, n_ops: int, batch: int = 256,
         assert (r["lines"], r["saved_lines"], r["dedup_rows"]) == \
             (base["lines"], base["saved_lines"], base["dedup_rows"]), rows
     return rows
+
+
+def shadow_crossover(n_init: int, n_ops: int, batch: int = 64,
+                     group: int = 4,
+                     synth_fence_ns: float = 1_000_000.0,
+                     repeats: int = 2) -> Dict:
+    """Barrier vs shadow commit, n_shards=4, FENCE-dominated regime:
+    small epoch groups so ordering points (3 per committed epoch in
+    barrier mode — data phase, metadata phase, commit seal — vs the
+    shadow mode's single generation flip) dominate the flush wall.
+    The sharded arena's fence spins exact (no sleep wakeup slack), so
+    the regime holds even at ms-scale ``synth_fence_ns`` — scaled, like
+    the sharded sweep's line stall, until the modeled latency clears
+    this host's per-epoch Python overhead; the fence COUNTS are exact
+    at any scale.
+
+    The compared rate charges BOTH modes the barrier row's line count:
+    shadow writes more lines (remap entries + next-epoch collapse), so
+    crediting each mode its own lines would inflate shadow's
+    numerator — the honest quantity is wall time per committed
+    workload."""
+    best: Dict[str, Dict] = {}
+    for _ in range(repeats):
+        for mode in ("barrier", "shadow"):
+            r = _sharded_flush(4, n_init, n_ops, batch, group,
+                               synth_ns=250.0, commit_mode=mode,
+                               synth_fence_ns=synth_fence_ns)
+            if (mode not in best
+                    or r["flush_wall_s"] < best[mode]["flush_wall_s"]):
+                best[mode] = r
+    bar, sh = best["barrier"], best["shadow"]
+    for r in best.values():
+        r["flush_lines_per_s"] = int(
+            bar["lines"] / max(r["flush_wall_s"], 1e-9))
+    return {"workload": "bptree mixed 1:1, n_shards=4, fence-dominated "
+                        "(rate charges both modes the barrier line "
+                        "count)",
+            "synth_fence_ns": synth_fence_ns,
+            "rows": [bar, sh],
+            "speedup": round(bar["flush_wall_s"]
+                             / max(sh["flush_wall_s"], 1e-9), 2)}
 
 
 def run(n_init: int = 20000, n_ops: int = 20000,
@@ -231,13 +279,30 @@ def run(n_init: int = 20000, n_ops: int = 20000,
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--shadow-crossover", action="store_true",
+                    help="run ONLY the barrier-vs-shadow commit "
+                         "comparison at n_shards=4 in the fence-"
+                         "dominated regime; records in --quick mode, "
+                         "asserts >= 1.3x otherwise — the CI gate")
     ap.add_argument("--out", default="BENCH_flush.json")
     args = ap.parse_args()
+    if args.shadow_crossover:
+        xr = shadow_crossover(4000, 8192, batch=64, group=4)
+        for r in xr["rows"]:
+            print(f"  {r['commit_mode']:>7}: wall {r['flush_wall_s']}s, "
+                  f"{r['fences']} fences, {r['epochs']} epochs, "
+                  f"{r['flush_lines_per_s']} lines/s")
+        print(f"shadow crossover @ n_shards=4: {xr['speedup']}x "
+              f"flush-phase throughput vs barrier")
+        if not args.quick:
+            assert xr["speedup"] >= 1.3, xr
+        return 0
     n_init, n_ops = (4000, 4000) if args.quick else (20000, 20000)
     rows = run(n_init, n_ops)
     from benchmarks.common import fmt_table
     cols = ["grouping", "per_call_lines", "lines", "saved_lines",
-            "save_vs_per_op", "save_vs_per_call", "dedup_rows", "epochs"]
+            "save_vs_per_op", "save_vs_per_call", "dedup_rows", "epochs",
+            "fences"]
     print(fmt_table(rows, cols))
 
     # quick mode shrinks the op count, so it raises the per-line stall
@@ -250,7 +315,16 @@ def main() -> int:
         shard_rows = sharded_sweep(n_init, 32768, batch=256, group=32,
                                    synth_ns=synth_ns, repeats=2)
     print(fmt_table(shard_rows, ["n_shards", "flush_wall_s", "lines",
-                                 "lines_per_s", "x_vs_1shard", "epochs"]))
+                                 "lines_per_s", "x_vs_1shard", "epochs",
+                                 "fences"]))
+
+    crossover = shadow_crossover(4000, 8192, batch=64, group=4)
+    for r in crossover["rows"]:
+        print(f"  {r['commit_mode']:>7}: wall {r['flush_wall_s']}s, "
+              f"{r['fences']} fences, {r['epochs']} epochs, "
+              f"{r['flush_lines_per_s']} lines/s")
+    print(f"shadow crossover @ n_shards=4: {crossover['speedup']}x "
+          f"flush-phase throughput vs barrier")
 
     with open(args.out, "w") as f:
         json.dump({"workload": "bptree mixed 1:1 insert/delete",
@@ -260,7 +334,8 @@ def main() -> int:
                                    "(epoch drain + commit), stall-"
                                    "dominated regime",
                        "synth_line_ns": synth_ns,
-                       "rows": shard_rows}}, f, indent=1)
+                       "rows": shard_rows},
+                   "shadow_crossover": crossover}, f, indent=1)
     print(f"-> {args.out}")
     # epoch batching must never regress per-call accounting, and the
     # grouped B+Tree mixed workload + DLL deletes must beat it outright
@@ -272,6 +347,11 @@ def main() -> int:
     assert x4 >= 1.0, shard_rows
     if not args.quick:
         assert x4 >= 1.3, shard_rows
+        # one ordering point per committed epoch instead of three: the
+        # fence-dominated regime must convert that into >= 1.3x flush-
+        # phase throughput (the dedicated --shadow-crossover step gates
+        # this on CI; quick mode records without asserting)
+        assert crossover["speedup"] >= 1.3, crossover
     return 0
 
 

@@ -398,6 +398,37 @@ def chain_row(n: int, repeats: int = 3) -> Dict:
                 scalar_s / max(secs["contract"], 1e-9), 2)}
 
 
+def device_chain_rows(sizes: List[int], k: int = 16) -> List[Dict]:
+    """Device contraction path: the per-hop `gather_next` cascade vs
+    the fused walk/expand kernels (kernels/chain_order.walk_segments /
+    expand_segments, one in-kernel fori_loop per pallas_call).  The
+    measured quantity is pallas_call ROUND TRIPS (co.KERNEL_CALLS) —
+    that's the cost the fusion removes on a real accelerator; the
+    interpret-mode wall rides along as a secondary signal."""
+    from repro.kernels import chain_order as co
+    rows = []
+    for n in sizes:
+        rng = np.random.default_rng(0)
+        perm = rng.permutation(n)
+        nxt = np.full(n, -1, np.int64)
+        nxt[perm[:-1]] = perm[1:]
+        head = int(perm[0])
+        row: Dict[str, Any] = {"n": n, "k": k}
+        for fuse, tag in ((False, "per_hop"), (True, "fused")):
+            co.KERNEL_CALLS = 0
+            t0 = time.perf_counter()
+            got = co.chain_order_device(nxt, head, method="contract",
+                                        k=k, fuse=fuse, interpret=True)
+            row[f"{tag}_s"] = round(time.perf_counter() - t0, 6)
+            row[f"{tag}_pallas_calls"] = co.KERNEL_CALLS
+            np.testing.assert_array_equal(got, perm)
+        row["roundtrip_saving"] = round(
+            row["per_hop_pallas_calls"]
+            / max(row["fused_pallas_calls"], 1), 2)
+        rows.append(row)
+    return rows
+
+
 def _timed(fn) -> float:
     t0 = time.perf_counter()
     fn()
@@ -468,6 +499,14 @@ def main() -> int:
               f"contract {c['contract_s']}s ({c['speedup_contract']}x) "
               f"-> auto={c['method']} {c['speedup']}x")
 
+    device = device_chain_rows([2048] if args.quick else [4096])
+    for r in device:
+        print(f"device contraction @ {r['n']} (k={r['k']}): per-hop "
+              f"{r['per_hop_pallas_calls']} pallas calls "
+              f"({r['per_hop_s']}s) vs fused "
+              f"{r['fused_pallas_calls']} ({r['fused_s']}s) -> "
+              f"{r['roundtrip_saving']}x fewer round trips")
+
     engine = None
     if not args.no_engine:
         engine = engine_report(n_requests=2 if args.quick else 4,
@@ -491,7 +530,8 @@ def main() -> int:
                    "sizes": sizes, "rows": rows,
                    "concurrent_vs_serial": conc,
                    "sharded_recovery": sharded,
-                   "chain_order": chain, "engine": engine,
+                   "chain_order": chain, "device_chain": device,
+                   "engine": engine,
                    "ckpt_warmup": ckpt}, f, indent=1)
     print(f"-> {args.out}")
     # the auto chain primitive must beat the seed scalar walk at EVERY
@@ -514,6 +554,10 @@ def main() -> int:
         # are rebuild-bound, see sharded_recovery_rows)
         for r in sharded:
             assert r["sharded_wall_ms"] <= r["single_wall_ms"], r
+        # the fused device walk exists to shrink kernel round trips —
+        # a deterministic count, so it gates in full mode without flake
+        for r in device:
+            assert r["fused_pallas_calls"] < r["per_hop_pallas_calls"], r
         if engine is not None:
             assert engine["ttft_after_crash_s"] <= engine["total_s"] * 1.5, \
                 engine

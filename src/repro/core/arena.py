@@ -72,6 +72,8 @@ class FlushStats:
     bytes: int = 0
     calls: int = 0
     fence_ns: int = 0      # synthetic latency accumulated (if enabled)
+    fences: int = 0        # ordering points paid (barrier phases + commit
+                           # seals in barrier mode; ONE flip in shadow mode)
     # epoch-flush (write-set) counters — DESIGN.md §2
     epochs: int = 0        # batched epoch flushes performed
     marks: int = 0         # mark_rows calls absorbed by the write set
@@ -138,19 +140,24 @@ class Region:
         pv[rows] = self._gather(rows)
         self.arena._account_rows(self.offset, self.rowbytes, rows)
 
-    def mark_rows(self, rows: np.ndarray) -> None:
+    def mark_rows(self, rows: np.ndarray, fresh: bool = False) -> None:
         """Add rows to the arena's write set (flushed once, deduplicated,
         when the enclosing epoch closes).  Outside any epoch this
         degrades to an immediate ``persist_rows`` — per-op call sites
-        behave identically either way."""
+        behave identically either way.  ``fresh=True`` asserts the rows
+        were never reachable from any committed generation (fresh-range
+        allocations above the committed high-water mark), so a shadow
+        drain may write them home in place instead of through the
+        remap; barrier mode ignores the hint."""
         if self.arena._epoch_depth > 0:
-            self.arena.writeset.mark(self, np.asarray(rows, np.int64))
+            self.arena.writeset.mark(self, np.asarray(rows, np.int64),
+                                     fresh=fresh)
         else:
             self.persist_rows(rows)
 
-    def mark_range(self, lo: int, hi: int) -> None:
+    def mark_range(self, lo: int, hi: int, fresh: bool = False) -> None:
         if hi > lo:
-            self.mark_rows(np.arange(lo, hi, dtype=np.int64))
+            self.mark_rows(np.arange(lo, hi, dtype=np.int64), fresh=fresh)
 
     def persist_range(self, lo: int, hi: int) -> None:
         if hi <= lo:
@@ -168,6 +175,7 @@ class Region:
         Pays the synthetic media read latency when the arena models one
         — the recovery-side mirror of the flush stall."""
         self.vol = np.array(self._pview())
+        self.arena._shadow_overlay(self)
         self.arena.synth_read(self.nbytes)
 
 
@@ -175,11 +183,15 @@ class Arena:
     """File-backed persistent arena with flush accounting."""
 
     def __init__(self, path: Optional[str], synth_line_ns: float = 0.0,
-                 pack_flush_rows: int = 0):
+                 pack_flush_rows: int = 0, commit_mode: str = "barrier",
+                 synth_fence_ns: float = 0.0):
+        assert commit_mode in ("barrier", "shadow")
         self.path = path
         self.regions: Dict[str, Region] = {}
         self.stats = FlushStats()
         self.synth_line_ns = synth_line_ns
+        self.commit_mode = commit_mode
+        self.synth_fence_ns = synth_fence_ns
         # >0: epoch flushes of at least this many rows gather through the
         # Pallas pack_flush kernel (tile-aligned staging buffer).
         self.pack_flush_rows = pack_flush_rows
@@ -201,6 +213,18 @@ class Arena:
         self._cursor = 4096  # header page
         self._meta: Dict[str, dict] = {}
         self.generation = 0
+        # shadow-commit state (DESIGN.md §9) — all volatile; the
+        # persistent side (one meta line, two remap-entry banks, and a
+        # per-region mirror per bank) is laid out by finalize() after
+        # the last region
+        self._region_ids: Dict[str, int] = {}
+        self._shadow_meta_off = 0
+        self._shadow_ent_off = [0, 0]
+        self._shadow_cap = 0
+        self._shadow_masks = ({}, {})   # bank -> {region name: bool mask}
+        self._shadow_counts = [0, 0]
+        self._shadow_collapsed = [True, True]
+        self._shadow_auth_bank = 0
 
     # -- epochs -----------------------------------------------------------
     @contextlib.contextmanager
@@ -233,6 +257,7 @@ class Arena:
                  **_slice_kw)
         self._cursor += _align(r.nbytes, LINE)
         self.regions[name] = r
+        self._region_ids[name] = len(self._region_ids)
         self._meta[name] = {"dtype": np.dtype(dtype).str,
                             "shape": list(shape), "offset": r.offset}
         return r
@@ -246,6 +271,8 @@ class Arena:
     def finalize(self) -> None:
         assert not self._layout_final
         self._layout_final = True
+        if self.commit_mode == "shadow":
+            self._shadow_layout()
         total = _align(self._cursor, 4096)
         if self.path is None:
             self._mm = np.zeros(total, np.uint8)  # in-memory (tests)
@@ -286,10 +313,16 @@ class Arena:
         """Data-before-metadata ordering: drain the write set, flush file
         contents, then set the valid flag (the paper's initialization
         flag bit).  Inside an epoch this flushes the pending marks first,
-        so a commit never orders the flag ahead of its data."""
+        so a commit never orders the flag ahead of its data.  In shadow
+        mode the whole protocol collapses to ONE ordering point — see
+        ``_commit_shadow``."""
+        if self.commit_mode == "shadow":
+            self._commit_shadow()
+            return
         self.writeset.flush()
         if isinstance(self._mm, np.memmap):
             self._mm.flush()
+        self._fence()
         self.generation += 1
         self._write_header(valid=True)
         if isinstance(self._mm, np.memmap):
@@ -299,6 +332,214 @@ class Arena:
     def invalidate(self) -> None:
         self._write_header(valid=False)
 
+    def _fence(self) -> None:
+        """One ordering point (sfence + drain of outstanding flushes):
+        counted per mode so the barrier-vs-shadow comparison is visible
+        in the stats artifact, and paid synthetically when
+        ``synth_fence_ns`` models the stall."""
+        self.stats.fences += 1
+        if self.synth_fence_ns:
+            self._stall(int(self.synth_fence_ns))
+
+    # -- shadow commit protocol (DESIGN.md §9) ------------------------------
+    def _shadow_layout(self) -> None:
+        """Persistent shadow areas, appended after the last region: one
+        meta line holding each remap bank's sealed entry count, two
+        remap-entry banks (one per generation parity: the epoch
+        targeting generation T writes bank T%2, so a torn flip never
+        touches the committed bank), and a per-region mirror per bank
+        whose slot index IS the row index — duplicate rewrites of a row
+        are idempotent by construction, and the remap entry is just
+        (region id, row)."""
+        cur = _align(self._cursor, LINE)
+        self._shadow_meta_off = cur
+        cur += LINE
+        self._shadow_cap = max(1, sum(r.shape[0]
+                                      for r in self.regions.values()))
+        for b in (0, 1):
+            self._shadow_ent_off[b] = cur
+            cur += _align(self._shadow_cap * 16, LINE)
+        for r in self.regions.values():
+            r._shadow_off = {}
+            for b in (0, 1):
+                r._shadow_off[b] = cur
+                cur += _align(r.nbytes, LINE)
+        self._cursor = cur
+
+    def _shadow_target_bank(self) -> int:
+        return (self.generation + 1) % 2
+
+    def _shadow_mirror(self, region: "Region", bank: int) -> np.ndarray:
+        flat = np.frombuffer(self._mm, dtype=np.uint8, count=region.nbytes,
+                             offset=region._shadow_off[bank])
+        return flat.view(region.dtype).reshape(region.shape)
+
+    def _shadow_entries(self, bank: int) -> np.ndarray:
+        flat = np.frombuffer(self._mm, dtype=np.uint8,
+                             count=self._shadow_cap * 16,
+                             offset=self._shadow_ent_off[bank])
+        return flat.view(np.int64).reshape(self._shadow_cap, 2)
+
+    def _shadow_meta_view(self) -> np.ndarray:
+        flat = np.frombuffer(self._mm, dtype=np.uint8, count=LINE,
+                             offset=self._shadow_meta_off)
+        return flat.view(np.int64)
+
+    def _shadow_write(self, region: "Region", rows: np.ndarray) -> None:
+        """Route a rewrite through the remap: the new row versions land
+        in the target bank's mirror (slot = row) and first-touch rows
+        append a (region, row) remap entry.  Committed home rows are
+        never rewritten before the flip, so the drain needs no ordering
+        against the metadata that references them."""
+        b = self._shadow_target_bank()
+        mask = self._shadow_masks[b].get(region.name)
+        if mask is None:
+            mask = self._shadow_masks[b][region.name] = \
+                np.zeros(region.shape[0], bool)
+        new = rows[~mask[rows]]
+        mask[rows] = True
+        self._shadow_mirror(region, b)[rows] = region._gather(rows)
+        self._account_rows(region._shadow_off[b], region.rowbytes, rows)
+        if new.size:
+            cnt = self._shadow_counts[b]
+            ents = self._shadow_entries(b)
+            ents[cnt:cnt + new.size, 0] = self._region_ids[region.name]
+            ents[cnt:cnt + new.size, 1] = new
+            self._account_range(self._shadow_ent_off[b] + cnt * 16,
+                                int(new.size) * 16)
+            self._shadow_counts[b] = cnt + int(new.size)
+
+    def _shadow_collapse(self, limit: Optional[int] = None) -> bool:
+        """Fold the committed bank's shadow rows into their home slots —
+        the stale-row reclamation, deferred into the next drain instead
+        of blocking the commit that created them.  The copy is
+        value-identical to what recovery would overlay, so a crash at
+        ANY instant during it (the double-failure window) changes
+        nothing the committed generation can observe.  ``limit`` bounds
+        the number of regions folded (crash-injection hook); returns
+        whether the bank fully collapsed."""
+        b = self.generation % 2
+        if self._shadow_collapsed[b]:
+            return True
+        done = True
+        for i, name in enumerate(sorted(self._shadow_masks[b])):
+            if limit is not None and i >= limit:
+                done = False
+                break
+            rows = np.nonzero(self._shadow_masks[b][name])[0]
+            if rows.size == 0:
+                continue
+            region = self.regions[name]
+            region._pview()[rows] = self._shadow_mirror(region, b)[rows]
+            self._account_rows(region.offset, region.rowbytes, rows)
+        if done:
+            self._shadow_collapsed[b] = True
+        return done
+
+    def _shadow_seal(self) -> None:
+        """Persist the target bank's entry count.  Safe before the
+        flip: the bank is dead weight until the generation pointer
+        selects it, and the committed bank's count slot is untouched."""
+        b = self._shadow_target_bank()
+        self._shadow_meta_view()[b] = self._shadow_counts[b]
+        self._account_range(self._shadow_meta_off + b * 8, 8)
+
+    def _shadow_retire(self) -> None:
+        """Post-flip bookkeeping: the previous bank's entries are dead
+        (their rows were folded home before the flip); the newly
+        committed bank awaits its fold at the next drain."""
+        live = self.generation % 2
+        dead = 1 - live
+        self._shadow_masks[dead].clear()
+        self._shadow_counts[dead] = 0
+        self._shadow_collapsed[dead] = True
+        self._shadow_collapsed[live] = self._shadow_counts[live] == 0
+        self._shadow_auth_bank = live
+
+    def _commit_shadow(self) -> None:
+        """Shadow commit: fold the previous epoch's shadow rows home,
+        drain the write set straight through — fresh rows in place,
+        rewrites into the target bank — seal the target bank's count,
+        then pay the ONE ordering point and flip the generation
+        pointer.  The flip atomically reassigns bank authority; a torn
+        flip leaves the committed bank (untouched since its own seal)
+        authoritative, and the orphaned target bank is discarded by
+        never being selected."""
+        self._shadow_collapse()
+        self.writeset.flush()
+        self._shadow_seal()
+        if isinstance(self._mm, np.memmap):
+            self._mm.flush()
+        self._fence()                      # the single ordering point
+        self.generation += 1
+        self._write_header(valid=True)
+        if isinstance(self._mm, np.memmap):
+            self._mm.flush()
+        self.stats.calls += 1
+        self._shadow_retire()
+
+    def _shadow_discard(self) -> None:
+        """Volatile shadow bookkeeping dies with a crash; ``reopen``
+        re-parses it from the committed bank."""
+        for m in self._shadow_masks:
+            m.clear()
+        self._shadow_counts = [0, 0]
+        self._shadow_collapsed = [True, True]
+
+    def _shadow_parse(self, authority_gen: Optional[int] = None) -> None:
+        """Post-crash: rebuild the volatile remap masks from the bank
+        the COMMITTED generation pointer selects — for a shard that is
+        the manifest generation, which may trail the shard's own header
+        if the flip tore between shards.  Entries in the other bank (a
+        torn flip's orphans) are never selected and are overwritten
+        when that bank is next targeted."""
+        if self.commit_mode != "shadow":
+            return
+        gen = self.header_generation() if authority_gen is None \
+            else authority_gen
+        b = gen % 2
+        cnt = int(self._shadow_meta_view()[b])
+        ents = np.array(self._shadow_entries(b)[:cnt])
+        masks: Dict[str, np.ndarray] = {}
+        names = list(self.regions)
+        for rid in (np.unique(ents[:, 0]) if cnt else ()):
+            name = names[int(rid)]
+            mask = np.zeros(self.regions[name].shape[0], bool)
+            mask[ents[ents[:, 0] == rid, 1]] = True
+            masks[name] = mask
+        self._shadow_masks = (masks, {}) if b == 0 else ({}, masks)
+        self._shadow_counts = [cnt, 0] if b == 0 else [0, cnt]
+        self._shadow_collapsed = [True, True]
+        self._shadow_collapsed[b] = cnt == 0
+        self._shadow_auth_bank = b
+        # re-anchor bank targeting to the COMMITTED generation: a shard
+        # whose header flipped ahead of a torn manifest write must aim
+        # its next drain at the bank the manifest's parity dooms, not
+        # keep writing into the bank recovery just selected
+        self.generation = gen
+
+    def _shadow_overlay(self, region: "Region",
+                        vol: Optional[np.ndarray] = None,
+                        gidx: Optional[np.ndarray] = None) -> None:
+        """Apply the authoritative bank's shadow rows over a freshly
+        loaded volatile copy — recovery-side only, and VOLATILE-only:
+        recovery persists nothing (the fold happens lazily at the next
+        drain, preserving reconstructor purity)."""
+        if self.commit_mode != "shadow":
+            return
+        mask = self._shadow_masks[self._shadow_auth_bank].get(region.name)
+        if mask is None:
+            return
+        rows = np.nonzero(mask)[0]
+        if rows.size == 0:
+            return
+        m = self._shadow_mirror(region, self._shadow_auth_bank)
+        if vol is None:
+            region.vol[rows] = m[rows]
+        else:
+            vol[gidx[rows]] = m[rows]
+        self.synth_read(int(rows.size) * region.rowbytes)
+
     # -- crash simulation ---------------------------------------------------
     def crash(self) -> None:
         """Discard all volatile state (keep the backing file).  Pending
@@ -306,13 +547,17 @@ class Arena:
         un-flushed rows; it must never flush zeroed volatile copies over
         committed data when a wrapping epoch unwinds."""
         self.writeset.discard()
+        self._shadow_discard()
         for r in self.regions.values():
             r.vol = np.zeros(r.shape, r.dtype)
 
     def reopen(self) -> None:
         """Reload every region's volatile copy from persistent memory,
         and re-anchor the in-memory generation counter to the committed
-        one (a fresh process starts at 0 otherwise)."""
+        one (a fresh process starts at 0 otherwise).  Shadow mode first
+        re-parses the committed bank's remap so each load overlays the
+        flipped-in row versions."""
+        self._shadow_parse()
         for r in self.regions.values():
             r.load()
         self.generation = max(self.generation, self.header_generation())
@@ -510,6 +755,8 @@ class _ShardSlice(Region):
 
     def load(self) -> None:
         self._parent.vol[self._gidx] = self._pview()
+        self.arena._shadow_overlay(self, vol=self._parent.vol,
+                                   gidx=self._gidx)
 
 
 class ShardedRegion:
@@ -566,20 +813,20 @@ class ShardedRegion:
             yield self.slices[s], self.local_of[sel]
 
     # -- Region API --------------------------------------------------------
-    def mark_rows(self, rows: np.ndarray) -> None:
+    def mark_rows(self, rows: np.ndarray, fresh: bool = False) -> None:
         rows = np.asarray(rows, np.int64)
         if rows.size == 0:
             return
         if self.arena._epoch_depth > 0:
             # buffered globally; the row->shard split happens once per
             # epoch at flush (ShardedWriteSet.mark documents why)
-            self.arena.writeset.mark(self, rows)
+            self.arena.writeset.mark(self, rows, fresh=fresh)
         else:
             self.persist_rows(rows)
 
-    def mark_range(self, lo: int, hi: int) -> None:
+    def mark_range(self, lo: int, hi: int, fresh: bool = False) -> None:
         if hi > lo:
-            self.mark_rows(np.arange(lo, hi, dtype=np.int64))
+            self.mark_rows(np.arange(lo, hi, dtype=np.int64), fresh=fresh)
 
     def persist_rows(self, rows: np.ndarray) -> None:
         rows = np.asarray(rows, np.int64)
@@ -629,6 +876,7 @@ class ShardedRegion:
                 self.vol[nb * B:] = pv[nfull * B:]
         else:
             self.vol[sl._gidx] = pv
+        sl.arena._shadow_overlay(sl, vol=self.vol, gidx=sl._gidx)
         # per-shard media read stall — sleeps in the shard pool, so N
         # shards' reload stalls overlap instead of summing
         sl.arena.synth_read(sl.nbytes)
@@ -649,17 +897,24 @@ class ShardedArena:
     """
 
     def __init__(self, path: Optional[str], n_shards: int = 2,
-                 synth_line_ns: float = 0.0, pack_flush_rows: int = 0):
+                 synth_line_ns: float = 0.0, pack_flush_rows: int = 0,
+                 commit_mode: str = "barrier", synth_fence_ns: float = 0.0):
         assert n_shards >= 1
+        assert commit_mode in ("barrier", "shadow")
         self.path = path
         self.n_shards = int(n_shards)
         self.shards = [Arena(f"{path}.s{k}" if path else None,
-                             synth_line_ns, pack_flush_rows)
+                             synth_line_ns, pack_flush_rows,
+                             commit_mode=commit_mode)
                        for k in range(self.n_shards)]
         for sh in self.shards:
             sh.synth_sleep = True
         self.synth_line_ns = synth_line_ns
         self.pack_flush_rows = pack_flush_rows
+        self.commit_mode = commit_mode
+        # the fence is a GLOBAL ordering point, so its synthetic stall
+        # lives at the sharded level, never per shard
+        self.synth_fence_ns = synth_fence_ns
         self.regions: Dict[str, ShardedRegion] = {}
         self.writeset = ShardedWriteSet(self)
         self.generation = 0
@@ -765,13 +1020,49 @@ class ShardedArena:
         return all(sh.header_valid() and sh.header_generation() >= gen
                    for sh in self.shards)
 
+    def _fence(self) -> None:
+        """The global ordering point — one per barrier phase plus one
+        per commit seal in barrier mode, exactly ONE per shadow commit."""
+        self._local_stats.fences += 1
+        if self.synth_fence_ns:
+            ns = int(self.synth_fence_ns)
+            self._local_stats.fence_ns += ns
+            t0 = time.perf_counter_ns()
+            while time.perf_counter_ns() - t0 < ns:
+                pass
+
     def commit(self, _crash_after_shard: Optional[int] = None) -> None:
-        """Drain write sets (global data-before-metadata), commit each
-        shard, manifest LAST.  ``_crash_after_shard=k`` is the
-        crash-injection hook for the inter-shard commit window: shards
-        0..k commit, then power fails before the manifest — the fuzzer's
-        sweep point (tests/test_sharded_arena.py)."""
-        self.writeset.flush()
+        """Drain write sets (global data-before-metadata in barrier
+        mode), commit each shard, manifest LAST.  ``_crash_after_shard=k``
+        is the crash-injection hook for the inter-shard commit window:
+        shards 0..k commit, then power fails before the manifest — the
+        fuzzer's sweep point (tests/test_sharded_arena.py).
+
+        Shadow mode: fold every shard's previous bank home and drain the
+        write set in one pooled phase (no cross-shard barrier), seal
+        each shard's target bank, pay the SINGLE ordering point, then
+        flip every shard's header and write the manifest last — the
+        existing cross-shard atomicity protocol carries over unchanged.
+        ``_crash_after_shard=-1`` crashes after the seals but before any
+        flip (the torn-flip window's leading edge)."""
+        if self.commit_mode == "shadow":
+            if self.n_shards > 1:
+                list(self.pool().map(lambda sh: sh._shadow_collapse(),
+                                     self.shards))
+            else:
+                self.shards[0]._shadow_collapse()
+            self.writeset.flush()
+            for sh in self.shards:
+                sh._shadow_seal()
+                if isinstance(sh._mm, np.memmap):
+                    sh._mm.flush()
+            if _crash_after_shard is not None and _crash_after_shard < 0:
+                self.crash()
+                return
+            self._fence()                  # the single ordering point
+        else:
+            self.writeset.flush()
+            self._fence()
         tgt = self.generation + 1
         for k, sh in enumerate(self.shards):
             if isinstance(sh._mm, np.memmap):
@@ -786,6 +1077,9 @@ class ShardedArena:
         self.generation = tgt
         self._write_manifest(valid=True)
         self._local_stats.calls += 1
+        if self.commit_mode == "shadow":
+            for sh in self.shards:
+                sh._shadow_retire()
 
     def invalidate(self) -> None:
         self._write_manifest(valid=False)
@@ -798,6 +1092,8 @@ class ShardedArena:
         the post-crash reload writes warm pages — allocator churn and
         page faults stay out of the recovery-critical path."""
         self.writeset.discard()
+        for sh in self.shards:
+            sh._shadow_discard()
         for r in self.regions.values():
             r.vol.fill(0)
 
@@ -809,6 +1105,13 @@ class ShardedArena:
         then re-anchor the generation to the manifest's.  ``exclude``
         names regions the caller will load itself (RecoveryManager's
         per-region load stages)."""
+        # shadow bank authority is the MANIFEST generation: a shard whose
+        # header flipped ahead of a torn manifest write must still
+        # overlay the manifest generation's bank (intact by parity, and
+        # value-identical to its own already-folded home rows)
+        man_gen = self.header_generation()
+        for sh in self.shards:
+            sh._shadow_parse(authority_gen=man_gen)
         regions = [r for n, r in self.regions.items() if n not in exclude]
 
         def load_shard(s: int) -> None:

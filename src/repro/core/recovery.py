@@ -723,7 +723,13 @@ class RecoveryManager:
             st = report.add("reopen", reopen_secs,
                             arenas=len(self.arenas), valid=valids,
                             shards=[getattr(a, "n_shards", 1)
-                                    for a in self.arenas])
+                                    for a in self.arenas],
+                            # which commit protocol the recovered bytes
+                            # came through: "shadow" means reopen also
+                            # selected the committed remap bank and
+                            # discarded orphans from any torn flip (§9)
+                            modes=[getattr(a, "commit_mode", "barrier")
+                                   for a in self.arenas])
             st.t_start, st.t_end = 0.0, reopen_secs
             report.valid = all(valids)
             # the committed (persisted) generation — survives recovery in

@@ -49,18 +49,21 @@ class WriteSet:
 
     def __init__(self, arena):
         self.arena = arena
-        # region name -> list of (unique row arrays, per-call line cost)
-        self._pending: Dict[str, List[Tuple[np.ndarray, int]]] = {}
+        # region name -> list of (unique rows, per-call line cost, fresh)
+        self._pending: Dict[str, List[Tuple[np.ndarray, int, bool]]] = {}
 
     # ------------------------------------------------------------- mark
-    def mark(self, region, rows: np.ndarray) -> None:
-        """Record dirty rows of `region`; flushed at epoch close."""
+    def mark(self, region, rows: np.ndarray, fresh: bool = False) -> None:
+        """Record dirty rows of `region`; flushed at epoch close.
+        ``fresh`` rows were never committed-reachable, so a shadow-mode
+        drain writes them home in place (barrier mode ignores it)."""
         rows = np.unique(np.asarray(rows, np.int64))
         if rows.size == 0:
             return
         would = self.arena._rows_line_count(region.offset, region.rowbytes,
                                             rows)
-        self._pending.setdefault(region.name, []).append((rows, would))
+        self._pending.setdefault(region.name, []).append((rows, would,
+                                                          fresh))
         self.arena.stats.marks += 1
 
     def __bool__(self) -> bool:
@@ -76,8 +79,17 @@ class WriteSet:
         once, copy volatile -> persistent.  Data regions first, then
         metadata regions (headers); ``include_meta=False`` flushes only
         the data half and DROPS the metadata marks — the crash-injection
-        point used by recovery tests."""
+        point used by recovery tests.  Shadow mode drains everything in
+        ONE unordered phase (fresh rows home, rewrites into the target
+        bank); ``include_meta=False`` then simply means "crash before
+        the flip" — nothing drained is reachable until commit."""
         if not self._pending:
+            return
+        if self.arena.commit_mode == "shadow":
+            flushed = self._flush_shadow()
+            self._pending.clear()
+            if flushed:
+                self.arena.stats.epochs += 1
             return
         flushed = self.flush_phase(meta=False)
         if include_meta:
@@ -100,6 +112,8 @@ class WriteSet:
         flushed_any = False
         with arena.stall_scope():
             flushed_any = self._flush_names(names, arena)
+        if flushed_any:
+            arena._fence()      # one ordering point per barrier phase
         return flushed_any
 
     def _flush_names(self, names, arena) -> bool:
@@ -107,9 +121,9 @@ class WriteSet:
         for name in names:
             region = arena.regions[name]
             marks = self._pending.pop(name)
-            rows = np.unique(np.concatenate([r for r, _ in marks]))
-            would_lines = sum(w for _, w in marks)
-            marked_rows = sum(r.size for r, _ in marks)
+            rows = np.unique(np.concatenate([r for r, _, _ in marks]))
+            would_lines = sum(w for _, w, _ in marks)
+            marked_rows = sum(r.size for r, _, _ in marks)
             self._copy_rows(region, rows)
             before = arena.stats.lines
             arena._account_rows(region.offset, region.rowbytes, rows)
@@ -117,6 +131,45 @@ class WriteSet:
             arena.stats.saved_lines += max(0, would_lines - actual)
             arena.stats.dedup_rows += marked_rows - rows.size
             flushed_any = True
+        return flushed_any
+
+    def _flush_shadow(self) -> bool:
+        """Single-phase shadow drain: every region together, no
+        data-before-metadata ordering — fresh rows go home in place
+        (unreachable until the flip), every other row routes through the
+        arena's remap (arena._shadow_write).  The committed bank's
+        leftovers fold home first (reclamation deferred from the prior
+        commit into this drain)."""
+        arena = self.arena
+        names = sorted(self._pending,
+                       key=lambda n: arena.regions[n].offset)
+        flushed_any = False
+        with arena.stall_scope():
+            arena._shadow_collapse()
+            for name in names:
+                region = arena.regions[name]
+                marks = self._pending.pop(name)
+                rew = [r for r, _, f in marks if not f]
+                frs = [r for r, _, f in marks if f]
+                rew = np.unique(np.concatenate(rew)) if rew \
+                    else np.empty(0, np.int64)
+                fr = np.unique(np.concatenate(frs)) if frs \
+                    else np.empty(0, np.int64)
+                # a row marked both ways is conservatively a rewrite
+                fr = np.setdiff1d(fr, rew, assume_unique=True)
+                would_lines = sum(w for _, w, _ in marks)
+                marked_rows = sum(r.size for r, _, _ in marks)
+                before = arena.stats.lines
+                if fr.size:
+                    self._copy_rows(region, fr)
+                    arena._account_rows(region.offset, region.rowbytes, fr)
+                if rew.size:
+                    arena._shadow_write(region, rew)
+                actual = arena.stats.lines - before
+                arena.stats.saved_lines += max(0, would_lines - actual)
+                arena.stats.dedup_rows += \
+                    marked_rows - int(fr.size) - int(rew.size)
+                flushed_any = True
         return flushed_any
 
     def _copy_rows(self, region, rows: np.ndarray) -> None:
@@ -145,10 +198,11 @@ class ShardedWriteSet:
 
     def __init__(self, arena):
         self.arena = arena
-        # region name -> [list of unique row arrays, would_lines, marked]
+        # region name -> [rewrite row arrays, would_lines, marked,
+        #                 fresh row arrays]
         self._pending: Dict[str, list] = {}
 
-    def mark(self, region, rows: np.ndarray) -> None:
+    def mark(self, region, rows: np.ndarray, fresh: bool = False) -> None:
         rows = np.unique(np.asarray(rows, np.int64))
         if rows.size == 0:
             return
@@ -163,8 +217,8 @@ class ShardedWriteSet:
         would = Arena._rows_line_count(0, region.rowbytes, rows)
         ent = self._pending.get(region.name)
         if ent is None:
-            ent = self._pending[region.name] = [[], 0, 0]
-        ent[0].append(rows)
+            ent = self._pending[region.name] = [[], 0, 0, []]
+        (ent[3] if fresh else ent[0]).append(rows)
         ent[1] += would
         ent[2] += rows.size
         self.arena._local_stats.marks += 1
@@ -179,6 +233,12 @@ class ShardedWriteSet:
         if not self._pending:
             return
         arena = self.arena
+        if arena.commit_mode == "shadow":
+            flushed = self._flush_shadow()
+            self._pending.clear()
+            if flushed:
+                arena._local_stats.epochs += 1
+            return
         flushed = self._flush_phase(meta=False)
         if include_meta:
             flushed = self._flush_phase(meta=True) or flushed
@@ -203,7 +263,8 @@ class ShardedWriteSet:
         region_rows = []
         for name in names:
             region = arena.regions[name]
-            arrs, would, marked = self._pending.pop(name)
+            arrs, would, marked, fresh_arrs = self._pending.pop(name)
+            arrs = arrs + fresh_arrs    # barrier mode: the hint is moot
             rows = np.unique(np.concatenate(arrs)) if len(arrs) > 1 \
                 else arrs[0]
             region_rows.append((region, rows, would, marked))
@@ -233,6 +294,64 @@ class ShardedWriteSet:
         arena._local_stats.saved_lines += max(0, would_total - total_actual)
         arena._local_stats.dedup_rows += sum(
             m - r.size for _, r, _, m in region_rows)
+        arena._fence()          # the global cross-shard ordering point
+        return True
+
+    def _flush_shadow(self) -> bool:
+        """Pooled SINGLE-phase shadow drain: no cross-shard barrier and
+        no data/metadata split — every shard folds its committed bank's
+        leftovers home, writes fresh rows in place, and routes rewrites
+        through its own remap bank, all concurrently.  Nothing drained
+        here is reachable until the commit's generation flip, which is
+        the one ordering point the whole epoch pays."""
+        arena = self.arena
+        names = sorted(self._pending)
+        if not names:
+            return False
+        work: Dict[int, list] = {}  # shard -> [(slice, local, fresh)]
+        region_rows = []
+        for name in names:
+            region = arena.regions[name]
+            arrs, would, marked, fresh_arrs = self._pending.pop(name)
+            rew = np.unique(np.concatenate(arrs)) if arrs \
+                else np.empty(0, np.int64)
+            fr = np.unique(np.concatenate(fresh_arrs)) if fresh_arrs \
+                else np.empty(0, np.int64)
+            # a row marked both ways is conservatively a rewrite
+            fr = np.setdiff1d(fr, rew, assume_unique=True)
+            region_rows.append((would, marked, int(fr.size + rew.size)))
+            for sl, local in region._split(rew):
+                work.setdefault(sl.arena_index, []).append(
+                    (sl, np.sort(local), False))
+            for sl, local in region._split(fr):
+                work.setdefault(sl.arena_index, []).append(
+                    (sl, np.sort(local), True))
+
+        actual = {}                     # shard -> lines flushed there
+
+        def flush_shard(s: int) -> None:
+            shard = arena.shards[s]
+            before = shard.stats.lines
+            with shard.stall_scope():
+                shard._shadow_collapse()
+                for sl, local, fresh in work.get(s, ()):
+                    if fresh:
+                        self._copy_rows(sl, local)
+                        shard._account_rows(sl.offset, sl.rowbytes, local)
+                    else:
+                        shard._shadow_write(sl, local)
+            actual[s] = shard.stats.lines - before
+
+        shards = sorted(work)
+        if len(shards) > 1:
+            list(arena.pool().map(flush_shard, shards))
+        elif shards:
+            flush_shard(shards[0])
+        total_actual = sum(actual.values())
+        would_total = sum(w for w, _, _ in region_rows)
+        arena._local_stats.saved_lines += max(0, would_total - total_actual)
+        arena._local_stats.dedup_rows += sum(
+            m - n for _, m, n in region_rows)
         return True
 
     def _copy_rows(self, sl, rows: np.ndarray) -> None:

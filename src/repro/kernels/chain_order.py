@@ -49,6 +49,11 @@ from repro.core.recovery import CONTRACT_K, chain_method
 
 NULL = -1
 
+# pallas_call round-trips issued by this module (interpret or compiled):
+# the contraction fusion's whole point is shrinking this, so benchmarks
+# snapshot it around a run instead of guessing from wall time
+KERNEL_CALLS = 0
+
 
 def packed_positions(ids, seg_rows: int, segments):
     """Position of each global row id in a shard-major packed array.
@@ -123,6 +128,8 @@ def jump_double(jump: jax.Array, cnt: jax.Array, *,
             pl.BlockSpec((1, 1), lambda i, p_ref: (i, 0)),
         ],
     )
+    global KERNEL_CALLS
+    KERNEL_CALLS += 1
     j2, c2 = pl.pallas_call(
         _double_kernel,
         grid_spec=spec,
@@ -177,6 +184,8 @@ def gather_next(nxt: jax.Array, ids, *,
         ],
         out_specs=pl.BlockSpec((1, 1), lambda i, p_ref: (i, 0)),
     )
+    global KERNEL_CALLS
+    KERNEL_CALLS += 1
     out = pl.pallas_call(
         _gather_kernel,
         grid_spec=spec,
@@ -184,6 +193,174 @@ def gather_next(nxt: jax.Array, ids, *,
         interpret=interpret,
     )(steer, nxt[:, None])
     return out[:, 0]
+
+
+def walk_segments(nxt: jax.Array, starts, *, k: int, head: int,
+                  n_mult: int, promoted: bool,
+                  segments: Optional[np.ndarray] = None,
+                  seg_rows: int = 0, budget: int = 64,
+                  interpret: bool = True
+                  ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Walk every lane's chain segment toward its next spine node in ONE
+    ``pallas_call``: an in-kernel ``fori_loop`` takes up to ``budget``
+    hops per lane (lanes freeze the step they arrive at a spine node or
+    the chain ends), replacing the one-host-roundtrip-per-hop
+    `gather_next` cascade of the contraction local walk.  The whole
+    (sanitized) pointer column rides in as a single block and each hop
+    is a dynamic in-kernel load — spine membership stays the arithmetic
+    ``id % k == 0`` test (plus the promoted head), so no lookup table
+    crosses the host boundary either.
+
+    Returns ``(cur, sp, w)`` per lane: final global id (NULL once the
+    chain ended), arrival spine index (NULL if still walking or the
+    chain ended), and hops taken this call.  A lane with ``cur >= 0``
+    and ``sp == NULL`` ran out of budget — feed ``cur`` back in to
+    continue (weights accumulate at the caller).
+
+    ``segments``/``seg_rows``: shard-major packed layout; the packed
+    position of each hop's global pointer is the same closed form as
+    `packed_positions`, evaluated in-kernel."""
+    n = nxt.shape[0]
+    starts = jnp.asarray(starts, jnp.int32)
+    if segments is not None:
+        segs = jnp.asarray(np.asarray(segments), jnp.int32)
+        n_shards = len(segments) - 1
+    else:
+        segs = jnp.zeros(1, jnp.int32)
+        n_shards = 1
+    sr = max(int(seg_rows), 1)
+    kk, hd, nm = int(k), int(head), int(n_mult)
+
+    def kern(start_ref, seg_ref, nxt_ref, cur_out, sp_out, w_out):
+        i = pl.program_id(0)
+
+        def pos(c):
+            if n_shards == 1:
+                return c
+            shard = (c // sr) % n_shards
+            local = (c // (sr * n_shards)) * sr + c % sr
+            return seg_ref[shard] + local
+
+        def spidx(c):
+            sp = jnp.where(c % kk == 0, c // kk, NULL)
+            if promoted:
+                sp = jnp.where(c == hd, nm, sp)
+            return sp
+
+        def hop(_, st):
+            cur, w, sp, done = st
+            nv = pl.load(nxt_ref,
+                         (pl.ds(pos(jnp.maximum(cur, 0)), 1),
+                          slice(None)))[0, 0]
+            live = jnp.logical_not(done)
+            cur2 = jnp.where(live, nv, cur)
+            w2 = jnp.where(live, w + 1, w)
+            spv = spidx(cur2)
+            arrived = live & (cur2 >= 0) & (spv >= 0)
+            sp2 = jnp.where(arrived, spv, sp)
+            done2 = done | (live & ((cur2 < 0) | arrived))
+            return cur2, w2, sp2, done2
+
+        g = start_ref[i]
+        cur, w, sp, _ = jax.lax.fori_loop(
+            0, budget, hop,
+            (g, jnp.int32(0), jnp.int32(NULL), g < 0))
+        cur_out[...] = jnp.full((1, 1), cur, jnp.int32)
+        sp_out[...] = jnp.full((1, 1), sp, jnp.int32)
+        w_out[...] = jnp.full((1, 1), w, jnp.int32)
+
+    spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(starts.shape[0],),
+        in_specs=[pl.BlockSpec((n, 1), lambda i, s_ref, g_ref: (0, 0))],
+        out_specs=[pl.BlockSpec((1, 1), lambda i, s_ref, g_ref: (i, 0)),
+                   pl.BlockSpec((1, 1), lambda i, s_ref, g_ref: (i, 0)),
+                   pl.BlockSpec((1, 1), lambda i, s_ref, g_ref: (i, 0))],
+    )
+    global KERNEL_CALLS
+    KERNEL_CALLS += 1
+    c2, sp, w = pl.pallas_call(
+        kern,
+        grid_spec=spec,
+        out_shape=(jax.ShapeDtypeStruct((starts.shape[0], 1), jnp.int32),
+                   jax.ShapeDtypeStruct((starts.shape[0], 1), jnp.int32),
+                   jax.ShapeDtypeStruct((starts.shape[0], 1), jnp.int32)),
+        interpret=interpret,
+    )(starts, segs, nxt[:, None])
+    return c2[:, 0], sp[:, 0], w[:, 0]
+
+
+def expand_segments(nxt: jax.Array, starts, posn, rem, count: int, *,
+                    segments: Optional[np.ndarray] = None,
+                    seg_rows: int = 0,
+                    interpret: bool = True) -> np.ndarray:
+    """Emit every node of the used contraction segments into the final
+    order array in ONE ``pallas_call``: lane i walks ``rem[i]`` hops
+    from ``starts[i]``, storing each visited global id at
+    ``out[posn[i] + t]`` — the whole (count,) order block persists
+    across the sequential grid (every step maps block (0, 0)), so the
+    lanes' disjoint runs land in a single kernel instead of one
+    host-roundtripped gather per hop.  Retired steps re-store the
+    lane's own first slot with its own first value, so no mask is
+    needed and no other lane's run is disturbed."""
+    n = nxt.shape[0]
+    starts = jnp.asarray(starts, jnp.int32)
+    posn = jnp.asarray(posn, jnp.int32)
+    rem_np = np.asarray(rem, np.int64)
+    remj = jnp.asarray(rem_np, jnp.int32)
+    L = int(starts.shape[0])
+    max_rem = int(rem_np.max()) if L else 0
+    if segments is not None:
+        segs = jnp.asarray(np.asarray(segments), jnp.int32)
+        n_shards = len(segments) - 1
+    else:
+        segs = jnp.zeros(1, jnp.int32)
+        n_shards = 1
+    sr = max(int(seg_rows), 1)
+
+    def kern(start_ref, pos_ref, rem_ref, seg_ref, nxt_ref, out_ref):
+        i = pl.program_id(0)
+
+        def pos(c):
+            if n_shards == 1:
+                return c
+            shard = (c // sr) % n_shards
+            local = (c // (sr * n_shards)) * sr + c % sr
+            return seg_ref[shard] + local
+
+        g0 = start_ref[i]
+        p0 = pos_ref[i]
+        r = rem_ref[i]
+
+        def hop(t, st):
+            cur, p = st
+            live = t < r
+            pl.store(out_ref,
+                     (pl.ds(jnp.where(live, p, p0), 1), slice(None)),
+                     jnp.full((1, 1), jnp.where(live, cur, g0),
+                              jnp.int32))
+            nv = pl.load(nxt_ref,
+                         (pl.ds(pos(jnp.maximum(cur, 0)), 1),
+                          slice(None)))[0, 0]
+            return jnp.where(t + 1 < r, nv, cur), p + 1
+
+        jax.lax.fori_loop(0, max_rem, hop, (g0, p0))
+
+    spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=4,
+        grid=(L,),
+        in_specs=[pl.BlockSpec((n, 1), lambda i, *_: (0, 0))],
+        out_specs=pl.BlockSpec((count, 1), lambda i, *_: (0, 0)),
+    )
+    global KERNEL_CALLS
+    KERNEL_CALLS += 1
+    out = pl.pallas_call(
+        kern,
+        grid_spec=spec,
+        out_shape=jax.ShapeDtypeStruct((count, 1), jnp.int32),
+        interpret=interpret,
+    )(starts, posn, remj, segs, nxt[:, None])
+    return np.asarray(out[:, 0], np.int64)
 
 
 def chain_tables_device(nxt: np.ndarray, bits: int, *,
@@ -220,6 +397,7 @@ def chain_order_device(nxt: np.ndarray, head: int, *,
                        seg_rows: int = 0,
                        method: str = "auto",
                        k: int = 0,
+                       fuse: bool = True,
                        interpret: bool = True) -> np.ndarray:
     """Full device-built chain order.  ``method`` — "double" (the
     doubling rounds run in the Pallas kernel; the final node-at-position
@@ -242,7 +420,8 @@ def chain_order_device(nxt: np.ndarray, head: int, *,
         return np.empty(0, np.int64)
     if chain_method(n, None, method) == "contract":
         return _order_device_contract(nxt, head, k or CONTRACT_K,
-                                      segments, seg_rows, interpret)
+                                      segments, seg_rows, interpret,
+                                      fuse=fuse)
 
     def pos_of(ids):
         if segments is None:
@@ -268,10 +447,17 @@ def chain_order_device(nxt: np.ndarray, head: int, *,
 def _order_device_contract(nxt: np.ndarray, head: int, k: int,
                            segments: Optional[np.ndarray],
                            seg_rows: int,
-                           interpret: bool) -> np.ndarray:
-    """Contraction list ranking with every chain hop in the Pallas
-    gather kernel; the host orchestrates lane bookkeeping between
-    rounds, the established chain_tables_device split.
+                           interpret: bool,
+                           fuse: bool = True) -> np.ndarray:
+    """Contraction list ranking with every chain hop in a Pallas
+    kernel; the host orchestrates lane bookkeeping between rounds, the
+    established chain_tables_device split.
+
+    ``fuse=True`` (default) runs the local walk through `walk_segments`
+    — one ``pallas_call`` covers up to ``budget`` hops for every lane,
+    so the typical segment (~k hops) resolves in a single round trip
+    instead of one per hop; ``fuse=False`` keeps the per-hop
+    `gather_next` cascade (the recovery_bench baseline rows).
 
     Spine membership is pure arithmetic (``id % k == 0``, plus the one
     promoted head), so the local walk needs no spine-position table:
@@ -296,31 +482,62 @@ def _order_device_contract(nxt: np.ndarray, head: int, k: int,
             out = np.where(ids == head, n_mult, out)
         return out.astype(np.int64)
 
-    # ---- local walk: one gather_next round per segment hop, lanes
-    # retired (and compacted away) as they reach the next spine node
     cnext = np.full(S, NULL, np.int64)
-    w = np.ones(S, np.int64)
-    lanes = np.arange(S)
-    cur = np.asarray(gather_next(jnxt, spine, segments=segments,
-                                 seg_rows=seg_rows, interpret=interpret),
-                     np.int64)
-    for _ in range(n + 1):
-        if not lanes.size:
-            break
-        sp = np.where(cur >= 0, spine_idx(np.maximum(cur, 0)), NULL)
-        arrived = sp >= 0
-        if arrived.any():
-            cnext[lanes[arrived]] = sp[arrived]
-        keep = (cur >= 0) & ~arrived
-        lanes = lanes[keep]
-        if lanes.size:
-            w[lanes] += 1
-            cur = np.asarray(gather_next(jnxt, cur[keep],
-                                         segments=segments,
-                                         seg_rows=seg_rows,
-                                         interpret=interpret), np.int64)
-    if lanes.size:                       # spine-free cycle: poison
-        w[lanes] = n + 1
+    if fuse:
+        # ---- local walk, fused: one walk_segments call covers up to
+        # `budget` hops for every live lane; lanes that exhaust the
+        # budget (segment longer than budget) feed their cursor back in
+        # and weights accumulate — typically ONE round trip total
+        w = np.zeros(S, np.int64)
+        lanes = np.arange(S)
+        cur = spine
+        budget = max(2 * k, 64)
+        hops = 0
+        while lanes.size and hops <= n:
+            c2, sp, wd = walk_segments(
+                jnxt, cur, k=k, head=head, n_mult=n_mult,
+                promoted=promoted, segments=segments, seg_rows=seg_rows,
+                budget=budget, interpret=interpret)
+            c2 = np.asarray(c2, np.int64)
+            sp = np.asarray(sp, np.int64)
+            w[lanes] += np.asarray(wd, np.int64)
+            arrived = sp >= 0
+            if arrived.any():
+                cnext[lanes[arrived]] = sp[arrived]
+            alive = (c2 >= 0) & ~arrived
+            lanes = lanes[alive]
+            cur = c2[alive]
+            hops += budget
+        if lanes.size:                   # spine-free cycle: poison
+            w[lanes] = n + 1
+        w = np.maximum(w, 1)
+    else:
+        # ---- local walk, per-hop baseline: one gather_next round per
+        # segment hop, lanes retired (and compacted away) as they reach
+        # the next spine node
+        w = np.ones(S, np.int64)
+        lanes = np.arange(S)
+        cur = np.asarray(gather_next(jnxt, spine, segments=segments,
+                                     seg_rows=seg_rows,
+                                     interpret=interpret), np.int64)
+        for _ in range(n + 1):
+            if not lanes.size:
+                break
+            sp = np.where(cur >= 0, spine_idx(np.maximum(cur, 0)), NULL)
+            arrived = sp >= 0
+            if arrived.any():
+                cnext[lanes[arrived]] = sp[arrived]
+            keep = (cur >= 0) & ~arrived
+            lanes = lanes[keep]
+            if lanes.size:
+                w[lanes] += 1
+                cur = np.asarray(gather_next(jnxt, cur[keep],
+                                             segments=segments,
+                                             seg_rows=seg_rows,
+                                             interpret=interpret),
+                                 np.int64)
+        if lanes.size:                   # spine-free cycle: poison
+            w[lanes] = n + 1
 
     # ---- rank the contracted chain with the existing doubling tables
     # (spine-index space: dense, layout-free, in-cache) — weights seed
@@ -354,10 +571,18 @@ def _order_device_contract(nxt: np.ndarray, head: int, k: int,
     use = ~dead & (g < count)
 
     # ---- expand: re-walk only the used segments, emitting into out
-    out = np.empty(count, np.int64)
     cur = spine[curq[use]]
     posn = g[use]
     rem = np.minimum(wq[use], count - posn)
+    if fuse:
+        # all runs land in one emitting pallas_call (the same fusion as
+        # the local walk, plus in-kernel stores at each lane's offsets)
+        if cur.size == 0:
+            return np.empty(count, np.int64)
+        return expand_segments(jnxt, cur, posn, rem, count,
+                               segments=segments, seg_rows=seg_rows,
+                               interpret=interpret)
+    out = np.empty(count, np.int64)
     while cur.size:
         out[posn] = cur
         rem -= 1

@@ -246,9 +246,19 @@ class BPTree:
         if not new_mask.any():
             return []
         nks, nvs = ks[new_mask], vs[new_mask]
+        f0 = int(hv[H_FRESH_RECS])
         recs = self._alloc_recs(len(nks))
         self.records.vol[recs, :VALUE_WORDS] = nvs
-        self.records.mark_rows(recs)
+        # fresh-range record slots sit above the committed watermark, so
+        # shadow mode flushes them home in place; free-list reuses may
+        # have been freed by a still-uncommitted delete (live in the
+        # committed image) and must route through the shadow remap
+        fr = recs[recs >= f0]
+        if fr.size:
+            self.records.mark_rows(fr, fresh=True)
+        rew = recs[recs < f0]
+        if rew.size:
+            self.records.mark_rows(rew)
         merged_k = np.concatenate([old_k, nks])
         merged_p = np.concatenate([old_p.astype(np.int64), recs])
         so = np.argsort(merged_k, kind="stable")

@@ -126,6 +126,7 @@ class DoublyLinkedList:
 
     def _append_batch(self, values: np.ndarray) -> np.ndarray:
         m = len(values)
+        fresh0 = int(self.header.vol[0, H_FRESH])
         ids = self._alloc(m)
         hv = self.header.vol[0]
         self.nodes.vol[ids, :DATA_WORDS] = values
@@ -153,8 +154,19 @@ class DoublyLinkedList:
         self._ring[self._r1:self._r1 + n] = ids
         self._r1 += n
         # ---- mark dirty (flushed once at epoch close) ----
-        dirty = ids if old_tail == NULL else np.concatenate([[old_tail], ids])
-        self.nodes.mark_rows(dirty)
+        # fresh-range ids sit above the committed fresh-water mark, so
+        # their bytes are dead in the committed image: shadow mode may
+        # flush them home in place (unreachable until the flip), while
+        # free-list reuses and the old tail's pointer rewrite must route
+        # through the shadow remap
+        new = ids[ids >= fresh0]
+        if new.size:
+            self.nodes.mark_rows(new, fresh=True)
+        reused = ids[ids < fresh0]
+        dirty = reused if old_tail == NULL \
+            else np.concatenate([[old_tail], reused])
+        if dirty.size:
+            self.nodes.mark_rows(dirty)
         self.header.mark_rows(np.array([0]))
         return ids
 

@@ -58,6 +58,10 @@ class EngineConfig:
     # hashes across shards, and the paged-KV metadata arena shards too —
     # recovery re-admits traffic per (shard, prompt-length) group.
     n_shards: int = 1
+    # Commit protocol of the host persistence substrate: "barrier" pays
+    # the two-phase data/metadata ordering each epoch; "shadow" routes
+    # rewrites through shadow banks and pays ONE flip (DESIGN.md §9)
+    commit_mode: str = "barrier"
     # Chain-ranking strategy for every recovery NEXT walk (request-table
     # unlinks, LRU ring scan): doubling vs contraction list ranking
     # (core.recovery.chain_method, DESIGN.md §8)
@@ -75,14 +79,16 @@ class ServingEngine:
         # reads each slot's prompt from its own shard file
         layout["tokens"] = (np.int32, (cfg.max_batch, cfg.s_max),
                             ("seg", 1))
-        self.arena = open_arena(arena_path, layout, n_shards=cfg.n_shards)
+        self.arena = open_arena(arena_path, layout, n_shards=cfg.n_shards,
+                                commit_mode=cfg.commit_mode)
         self.table = Hashmap(self.arena, cfg.max_requests, cfg.mode,
                              name="req", chain_method=cfg.chain_method)
         self.tok_region = self.arena.regions["tokens"]
         self.paging = PagedAllocator(PagedConfig(
             n_pages=cfg.max_batch * (cfg.s_max // cfg.page_tokens),
             page_tokens=cfg.page_tokens, mode=cfg.mode,
-            n_shards=cfg.n_shards, chain_method=cfg.chain_method))
+            n_shards=cfg.n_shards, commit_mode=cfg.commit_mode,
+            chain_method=cfg.chain_method))
         # device state (DERIVABLE)
         self.cache = model.init_cache(cfg.max_batch, cfg.s_max)
         self.pos = np.zeros(cfg.max_batch, np.int64)       # per-slot length

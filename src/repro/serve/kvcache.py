@@ -30,6 +30,7 @@ class PagedConfig:
     page_tokens: int = 64
     mode: str = "partly"
     n_shards: int = 1      # shard count of the page-metadata arena
+    commit_mode: str = "barrier"   # "barrier" | "shadow" (DESIGN.md §9)
     # chain-ranking strategy for the LRU ring scan after a crash (the
     # DLL reconstructor's NEXT walk): "auto" flips from pointer doubling
     # to contraction list ranking once the page pool crosses the
@@ -49,7 +50,8 @@ class PagedAllocator:
     def __init__(self, cfg: PagedConfig, path: Optional[str] = None):
         self.cfg = cfg
         layout = DoublyLinkedList.layout(cfg.n_pages, cfg.mode, name="lru")
-        self.arena = open_arena(path, layout, n_shards=cfg.n_shards)
+        self.arena = open_arena(path, layout, n_shards=cfg.n_shards,
+                                commit_mode=cfg.commit_mode)
         self.lru = DoublyLinkedList(self.arena, cfg.n_pages, cfg.mode,
                                     name="lru",
                                     chain_method=cfg.chain_method)

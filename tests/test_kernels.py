@@ -222,18 +222,21 @@ def test_chain_order_device_segments_from_sharded_dll():
         interpret=True)
     np.testing.assert_array_equal(got, d.to_list())
     # the contraction path must agree bit-for-bit on the SAME packed
-    # layout (acceptance: sharded packed layout included)
-    got_c = chain_order.chain_order_device(
-        packed, d.head, segments=segments, seg_rows=DL.SHARD_SEG,
-        method="contract", k=16, interpret=True)
-    np.testing.assert_array_equal(got_c, d.to_list())
+    # layout (acceptance: sharded packed layout included), fused
+    # walk/expand kernels and the per-hop cascade alike
+    for fuse in (False, True):
+        got_c = chain_order.chain_order_device(
+            packed, d.head, segments=segments, seg_rows=DL.SHARD_SEG,
+            method="contract", k=16, fuse=fuse, interpret=True)
+        np.testing.assert_array_equal(got_c, d.to_list())
 
 
 # ------------------------- contraction list ranking, device (§8)
 
 
+@pytest.mark.parametrize("fuse", [False, True])
 @pytest.mark.parametrize("k", [4, 32])
-def test_chain_order_device_contract_matches_host(k):
+def test_chain_order_device_contract_matches_host(k, fuse):
     from repro.core.recovery import chain_order as chain_order_np
     rng = np.random.default_rng(7)
     n = 96
@@ -243,9 +246,29 @@ def test_chain_order_device_contract_matches_host(k):
     nxt[live[:-1]] = live[1:]
     head = int(live[0])
     got = chain_order.chain_order_device(nxt, head, method="contract",
-                                         k=k, interpret=True)
+                                         k=k, fuse=fuse, interpret=True)
     np.testing.assert_array_equal(got, chain_order_np(nxt, head))
     np.testing.assert_array_equal(got, live)
+
+
+def test_contract_fused_saves_round_trips():
+    """The fused walk/expand kernels must resolve the same order in
+    strictly fewer pallas_call round trips than the per-hop cascade —
+    the deterministic quantity the fusion exists to shrink."""
+    rng = np.random.default_rng(11)
+    n = 512
+    perm = rng.permutation(n)
+    nxt = np.full(n, -1, np.int64)
+    nxt[perm[:-1]] = perm[1:]
+    calls = {}
+    for fuse in (False, True):
+        chain_order.KERNEL_CALLS = 0
+        got = chain_order.chain_order_device(
+            nxt, int(perm[0]), method="contract", k=8, fuse=fuse,
+            interpret=True)
+        np.testing.assert_array_equal(got, perm)
+        calls[fuse] = chain_order.KERNEL_CALLS
+    assert calls[True] < calls[False], calls
 
 
 @pytest.mark.parametrize("method", ["double", "contract"])
@@ -258,7 +281,8 @@ def test_chain_order_device_mid_chain_cycle(method):
                                        interpret=True)
 
 
-def test_chain_order_device_contract_spine_free_cycle():
+@pytest.mark.parametrize("fuse", [False, True])
+def test_chain_order_device_contract_spine_free_cycle(fuse):
     """A mid-chain cycle containing no sampled spine node: the device
     local walk must poison the stuck segment (not spin) and still
     surface "cycle"."""
@@ -267,19 +291,22 @@ def test_chain_order_device_contract_spine_free_cycle():
     nxt[9], nxt[10], nxt[11] = 10, 11, 9     # 9/10/11 all % 8 != 0
     with pytest.raises(RuntimeError, match="cycle"):
         chain_order.chain_order_device(nxt, 0, method="contract", k=8,
-                                       interpret=True)
+                                       fuse=fuse, interpret=True)
 
 
-def test_chain_order_device_contract_oob_and_empty():
+@pytest.mark.parametrize("fuse", [False, True])
+def test_chain_order_device_contract_oob_and_empty(fuse):
     from repro.core.recovery import chain_order as chain_order_np
     nxt = np.array([1, 8, -1, -1], np.int64)     # 8 OOB terminates
     got = chain_order.chain_order_device(nxt, 0, method="contract", k=2,
-                                         interpret=True)
+                                         fuse=fuse, interpret=True)
     np.testing.assert_array_equal(got, chain_order_np(nxt, 0))
     assert chain_order.chain_order_device(
-        nxt, -1, method="contract", k=2, interpret=True).size == 0
+        nxt, -1, method="contract", k=2, fuse=fuse,
+        interpret=True).size == 0
     assert chain_order.chain_order_device(
-        nxt, 99, method="contract", k=2, interpret=True).size == 0
+        nxt, 99, method="contract", k=2, fuse=fuse,
+        interpret=True).size == 0
 
 
 # --------------------------------------- chain primitive edge cases
