@@ -33,6 +33,21 @@ SYNTH_LINE_NS = 250.0     # emulated clwb+fence cost per 64B line
 BATCH = 64
 
 
+def arena_fields(a=None, **over) -> Dict:
+    """Substrate triple stamped on EVERY bench row (commit protocol,
+    shard count, persisted arena bytes) so rows from different
+    configurations stay self-describing in the JSON artifacts.  Rows
+    with no arena behind them (raw chain primitives, the ckpt restore)
+    stamp ``commit_mode="none"`` and the working-set bytes instead."""
+    f = {"commit_mode": "none", "n_shards": 1, "arena_bytes": 0}
+    if a is not None:
+        f = {"commit_mode": a.commit_mode,
+             "n_shards": int(getattr(a, "n_shards", 1)),
+             "arena_bytes": int(sum(r.nbytes for r in a.regions.values()))}
+    f.update(over)
+    return f
+
+
 @dataclasses.dataclass
 class Cell:
     structure: str

@@ -40,7 +40,7 @@ from typing import Dict, List
 
 import numpy as np
 
-from benchmarks.common import make_structure
+from benchmarks.common import arena_fields, make_structure
 from repro.core.arena import open_arena
 from repro.pstruct.bptree import BPTree
 
@@ -88,9 +88,11 @@ def _bptree_mixed(n_init: int, n_ops: int, batch: int, group: int,
             a.commit()
     d = a.stats.delta(base)
     return {"lines": d.lines, "saved_lines": d.saved_lines,
+            "snapshot_lines": d.snapshot_lines,
             "dedup_rows": d.dedup_rows, "epochs": d.epochs,
             "fences": d.fences,
-            "per_call_lines": d.lines + d.saved_lines}
+            "per_call_lines": d.lines + d.saved_lines,
+            **arena_fields(a)}
 
 
 def _apply(t, chunk) -> None:
@@ -117,10 +119,15 @@ def _dll_delete(n_init: int, n_ops: int, batch: int, seed: int = 0) -> Dict:
         d.delete_batch(ids[i:i + batch])
         a.commit()
     dd = a.stats.delta(base)
+    # snapshot_lines (DLL order snapshots, DESIGN.md §10) reported
+    # SEPARATELY: lines/saved_lines stay bit-comparable to the
+    # pre-snapshot artifacts
     return {"lines": dd.lines, "saved_lines": dd.saved_lines,
+            "snapshot_lines": dd.snapshot_lines,
             "dedup_rows": dd.dedup_rows, "epochs": dd.epochs,
             "fences": dd.fences,
-            "per_call_lines": dd.lines + dd.saved_lines}
+            "per_call_lines": dd.lines + dd.saved_lines,
+            **arena_fields(a)}
 
 
 def _sharded_flush(n_shards: int, n_init: int, n_ops: int, batch: int,
@@ -172,9 +179,10 @@ def _sharded_flush(n_shards: int, n_init: int, n_ops: int, batch: int,
         flush_wall += time.perf_counter() - t0
     d = a.stats.delta(base)
     a.close()    # release the shard pool + memmap handles per sweep point
-    return {"n_shards": n_shards, "commit_mode": commit_mode,
+    return {**arena_fields(a),
             "flush_wall_s": round(flush_wall, 6),
             "lines": d.lines, "saved_lines": d.saved_lines,
+            "snapshot_lines": d.snapshot_lines,
             "dedup_rows": d.dedup_rows, "epochs": d.epochs,
             "fences": d.fences,
             "lines_per_s": int(d.lines / max(flush_wall, 1e-9))}
@@ -301,8 +309,8 @@ def main() -> int:
     rows = run(n_init, n_ops)
     from benchmarks.common import fmt_table
     cols = ["grouping", "per_call_lines", "lines", "saved_lines",
-            "save_vs_per_op", "save_vs_per_call", "dedup_rows", "epochs",
-            "fences"]
+            "snapshot_lines", "save_vs_per_op", "save_vs_per_call",
+            "dedup_rows", "epochs", "fences"]
     print(fmt_table(rows, cols))
 
     # quick mode shrinks the op count, so it raises the per-line stall

@@ -80,6 +80,9 @@ class FlushStats:
     dedup_rows: int = 0    # row marks dropped as duplicates within an epoch
     saved_lines: int = 0   # lines one accounting call PER MARK would have
                            # charged minus lines the epoch flush charged
+    snapshot_lines: int = 0  # order-snapshot lines (DESIGN.md §10) — kept
+                             # OUT of `lines`/`saved_lines` so partly-vs-
+                             # full accounting stays comparable across PRs
 
     def snapshot(self) -> "FlushStats":
         return dataclasses.replace(self)
@@ -99,9 +102,16 @@ class Region:
         self.dtype = np.dtype(dtype)
         self.shape = tuple(shape)
         self.offset = offset
+        # Order-snapshot regions (DESIGN.md §10) are derivable-redundancy
+        # mirrors: their flush lines are accounted separately
+        # (FlushStats.snapshot_lines) and they ride the metadata phase so
+        # a torn data-phase crash never leaves half a snapshot behind the
+        # committed header.
+        self.snap = ".snap" in name
         # Metadata regions (structure headers) flush AFTER data regions
         # within an epoch — data-before-metadata ordering (DESIGN.md §2).
-        self.meta = name.endswith("header") if meta is None else meta
+        self.meta = (name.endswith("header") or self.snap) \
+            if meta is None else meta
         self.rowbytes = int(self.dtype.itemsize * np.prod(shape[1:], dtype=np.int64)) \
             if len(shape) > 1 else self.dtype.itemsize
         self.nbytes = self.rowbytes * shape[0]
@@ -138,7 +148,8 @@ class Region:
         rows = np.unique(rows)
         pv = self._pview()
         pv[rows] = self._gather(rows)
-        self.arena._account_rows(self.offset, self.rowbytes, rows)
+        self.arena._account_rows(self.offset, self.rowbytes, rows,
+                                 snap=self.snap)
 
     def mark_rows(self, rows: np.ndarray, fresh: bool = False) -> None:
         """Add rows to the arena's write set (flushed once, deduplicated,
@@ -165,7 +176,8 @@ class Region:
         pv = self._pview()
         pv[lo:hi] = self._gather_range(lo, hi)
         self.arena._account_range(self.offset + lo * self.rowbytes,
-                                  (hi - lo) * self.rowbytes)
+                                  (hi - lo) * self.rowbytes,
+                                  snap=self.snap)
 
     def persist_all(self) -> None:
         self.persist_range(0, self.shape[0])
@@ -209,6 +221,11 @@ class Arena:
         self.writeset = WriteSet(self)
         self._epoch_depth = 0
         self._layout_final = False
+        # order-snapshot providers (DESIGN.md §10): callables returning
+        # [(region, rows), ...] drained by the write set ONLY inside a
+        # commit (never by mid-epoch flushes), so snapshot bytes always
+        # ride the commit protocol of whichever mode is active
+        self._snap_providers: List = []
         self._mm: Optional[np.memmap] = None
         self._cursor = 4096  # header page
         self._meta: Dict[str, dict] = {}
@@ -289,6 +306,14 @@ class Arena:
         if self.path is not None:
             with open(self.path + ".layout", "w") as f:
                 json.dump(self._meta, f)
+
+    # -- order snapshots (DESIGN.md §10) -----------------------------------
+    def add_snapshot_provider(self, fn) -> None:
+        """Register an order-snapshot provider: a callable returning
+        ``[(region, rows), ...]`` of snapshot-region rows to persist.
+        Drained by the write set exactly once per commit, inside the
+        active commit protocol."""
+        self._snap_providers.append(fn)
 
     # -- header / commit protocol -----------------------------------------
     def _write_header(self, valid: bool) -> None:
@@ -399,14 +424,15 @@ class Arena:
         new = rows[~mask[rows]]
         mask[rows] = True
         self._shadow_mirror(region, b)[rows] = region._gather(rows)
-        self._account_rows(region._shadow_off[b], region.rowbytes, rows)
+        self._account_rows(region._shadow_off[b], region.rowbytes, rows,
+                           snap=region.snap)
         if new.size:
             cnt = self._shadow_counts[b]
             ents = self._shadow_entries(b)
             ents[cnt:cnt + new.size, 0] = self._region_ids[region.name]
             ents[cnt:cnt + new.size, 1] = new
             self._account_range(self._shadow_ent_off[b] + cnt * 16,
-                                int(new.size) * 16)
+                                int(new.size) * 16, snap=region.snap)
             self._shadow_counts[b] = cnt + int(new.size)
 
     def _shadow_collapse(self, limit: Optional[int] = None) -> bool:
@@ -431,7 +457,8 @@ class Arena:
                 continue
             region = self.regions[name]
             region._pview()[rows] = self._shadow_mirror(region, b)[rows]
-            self._account_rows(region.offset, region.rowbytes, rows)
+            self._account_rows(region.offset, region.rowbytes, rows,
+                               snap=region.snap)
         if done:
             self._shadow_collapsed[b] = True
         return done
@@ -563,10 +590,18 @@ class Arena:
         self.generation = max(self.generation, self.header_generation())
 
     # -- accounting ---------------------------------------------------------
-    def _account_range(self, byte_off: int, nbytes: int) -> None:
+    def _account_range(self, byte_off: int, nbytes: int,
+                       snap: bool = False) -> None:
         lo = (byte_off // LINE) * LINE
         hi = _align(byte_off + nbytes, LINE)
         lines = (hi - lo) // LINE
+        if snap:
+            # snapshot overhead is real media traffic (it pays the synth
+            # stall) but lands in its own counter so data-line accounting
+            # stays bit-comparable to snapshot-off runs
+            self.stats.snapshot_lines += lines
+            self._synth(lines)
+            return
         self.stats.lines += lines
         self.stats.bytes += nbytes
         self.stats.calls += 1
@@ -586,8 +621,13 @@ class Arena:
                             np.concatenate(([-1], ends[:-1])) + 1)
         return int(np.sum(np.maximum(0, ends - starts + 1)))
 
-    def _account_rows(self, base: int, rowbytes: int, rows: np.ndarray) -> None:
+    def _account_rows(self, base: int, rowbytes: int, rows: np.ndarray,
+                      snap: bool = False) -> None:
         lines = self._rows_line_count(base, rowbytes, rows)
+        if snap:
+            self.stats.snapshot_lines += lines
+            self._synth(lines)
+            return
         self.stats.lines += lines
         self.stats.bytes += int(rows.size) * rowbytes
         self.stats.calls += 1
@@ -664,6 +704,59 @@ def _splitmix64(x: np.ndarray) -> np.ndarray:
     x = (x ^ (x >> np.uint64(30))) * np.uint64(0xBF58476D1CE4E5B9)
     x = (x ^ (x >> np.uint64(27))) * np.uint64(0x94D049BB133111EB)
     return x ^ (x >> np.uint64(31))
+
+
+# ======================================================================
+# Incremental order snapshots — record format (DESIGN.md §10)
+# ======================================================================
+
+SNAP_MAGIC = 0x50414E53          # "SNAP" little-endian
+SNAP_SLOTS = 4                   # record-ring slots; one 64 B line each
+SNAP_WORDS = 8                   # int64 words per record (= one line)
+
+
+def snapshot_enabled(flag: Optional[bool] = None) -> bool:
+    """Resolve a structure's ``snapshot=`` ctor arg: an explicit flag
+    wins; ``None`` defers to the ``REPRO_SNAPSHOT`` env axis (default
+    on).  Snapshot-off layouts and accounting are bit-identical to the
+    pre-snapshot substrate."""
+    if flag is not None:
+        return bool(flag)
+    return os.environ.get("REPRO_SNAPSHOT", "1") != "0"
+
+
+def snap_checksum(rec: np.ndarray) -> int:
+    """Mix-then-xor checksum over the first 7 words of a snapshot
+    record.  A torn 64 B record line (the only partial-write unit the
+    substrate can produce) fails this with overwhelming probability, so
+    recovery can reject it without any ordering requirement between the
+    record and the ring rows it describes."""
+    w = np.asarray(rec, np.int64)[:7].astype(np.uint64)
+    mixed = _splitmix64(w + np.arange(1, 8, dtype=np.uint64))
+    return int(np.bitwise_xor.reduce(mixed).astype(np.int64))
+
+
+def snap_record_pack(gen: int, seq: int, a: int, b: int, c: int,
+                     d: int = 0) -> np.ndarray:
+    """Sealed snapshot record: ``[magic, gen, seq, a, b, c, d, cksum]``
+    — exactly one flush line.  ``gen`` is the generation the enclosing
+    commit is sealing; ``seq`` picks the record-ring slot (seq %
+    SNAP_SLOTS) so a torn append can only damage the slot it targets,
+    never the previously sealed records."""
+    rec = np.array([SNAP_MAGIC, gen, seq, a, b, c, d, 0], np.int64)
+    rec[7] = snap_checksum(rec)
+    return rec
+
+
+def snap_record_parse(rec: np.ndarray) -> Optional[Tuple[int, ...]]:
+    """``(gen, seq, a, b, c, d)`` if the record line is intact, else
+    ``None`` (torn append, never-written slot, or foreign bytes)."""
+    rec = np.asarray(rec, np.int64).ravel()
+    if rec.size != SNAP_WORDS or int(rec[0]) != SNAP_MAGIC:
+        return None
+    if int(rec[7]) != snap_checksum(rec):
+        return None
+    return tuple(int(x) for x in rec[1:7])
 
 
 def route_rows(router, n_rows: int, n_shards: int, rr_hint: int = 0
@@ -773,7 +866,9 @@ class ShardedRegion:
         self.name = name
         self.dtype = np.dtype(dtype)
         self.shape = tuple(shape)
-        self.meta = name.endswith("header") if meta is None else meta
+        self.snap = ".snap" in name
+        self.meta = (name.endswith("header") or self.snap) \
+            if meta is None else meta
         self.rowbytes = int(self.dtype.itemsize *
                             np.prod(shape[1:], dtype=np.int64)) \
             if len(shape) > 1 else self.dtype.itemsize
@@ -920,6 +1015,7 @@ class ShardedArena:
         self.generation = 0
         self._epoch_depth = 0
         self._layout_final = False
+        self._snap_providers: List = []
         self._local_stats = FlushStats()
         self._man: Optional[np.ndarray] = None
         self._rr = 0
@@ -995,6 +1091,10 @@ class ShardedArena:
                         f"arena at {self.path!r} was committed with "
                         f"{man_shards} shards, opened with "
                         f"{self.n_shards}")
+
+    # -- order snapshots (DESIGN.md §10) -----------------------------------
+    def add_snapshot_provider(self, fn) -> None:
+        self._snap_providers.append(fn)
 
     # -- manifest / commit protocol ----------------------------------------
     def _write_manifest(self, valid: bool) -> None:

@@ -68,7 +68,8 @@ NULL = -1
 
 __all__ = [
     "NULL", "chain_order", "chain_lengths", "chain_walk", "jump_tables",
-    "chain_method", "CONTRACT_K", "CONTRACT_MIN_N", "CONTRACT_MIN_COUNT",
+    "chain_method", "ChainSnapshot", "CONTRACT_K", "CONTRACT_MIN_N",
+    "CONTRACT_MIN_COUNT",
     "StageReport", "RecoveryReport", "Recoverable", "RecoveryManager",
 ]
 
@@ -199,9 +200,52 @@ def chain_lengths(nxt: np.ndarray, heads: np.ndarray, *,
     return out
 
 
+class ChainSnapshot:
+    """A candidate node order seeded from a committed incremental order
+    snapshot (DESIGN.md §10), handed to ``chain_order(snapshot=...)``.
+
+    The candidate is NEVER trusted: adoption requires one O(count)
+    vectorized verification pass against the committed NEXT chain —
+    ``cand[0] == head`` and ``nxt[cand[i]] == cand[i+1]`` for every
+    position.  NEXT is a function of the node id, so a candidate that
+    verifies is *mathematically* the chain_order output: bit-identical
+    recovery whether the snapshot was used or not, in every torn-write
+    scenario the crash fuzzer can produce.  Any mismatch (torn snapshot
+    record, stale ring rows, crash inside the commit window) silently
+    falls back to the full contraction/doubling rank.
+
+    ``outcome`` is filled by chain_order — "snapshot" on adoption, else
+    the fallback method name ("contract"/"double") — and ``replayed``
+    is the suffix length the seed had to local-walk (set by the
+    structure that built the candidate; reset to the full count on
+    fallback), which is what RecoveryManager stage details report."""
+
+    def __init__(self, candidate: np.ndarray, replayed: int = 0):
+        self.candidate = np.asarray(candidate, np.int64).ravel()
+        self.replayed = int(replayed)
+        self.outcome: Optional[str] = None
+
+
+def _snapshot_verify(nxt: np.ndarray, head: int, count: Optional[int],
+                     cand: np.ndarray) -> bool:
+    """True iff `cand` IS chain_order(nxt, head, count) — one pass of
+    O(count) vectorized gathers, no scalar loop."""
+    if count is None or cand.size != count:
+        return False
+    n = nxt.shape[0]
+    if int(cand[0]) != int(head):
+        return False
+    if ((cand < 0) | (cand >= n)).any():
+        return False
+    if count > 1 and not np.array_equal(
+            np.asarray(nxt)[cand[:-1]], cand[1:]):
+        return False
+    return True
+
+
 def chain_order(nxt: np.ndarray, head: int, count: Optional[int] = None,
-                *, method: str = "auto",
-                k: Optional[int] = None) -> np.ndarray:
+                *, method: str = "auto", k: Optional[int] = None,
+                snapshot: Optional[ChainSnapshot] = None) -> np.ndarray:
     """node-at-position for positions 0..count-1.
 
     ``count=None`` derives the length first (one lifting descent off the
@@ -223,6 +267,14 @@ def chain_order(nxt: np.ndarray, head: int, count: Optional[int] = None,
         return np.empty(0, np.int64)
     if count == 0:
         return np.empty(0, np.int64)
+    if snapshot is not None:
+        if _snapshot_verify(nxt, head, count, snapshot.candidate):
+            snapshot.outcome = "snapshot"
+            return snapshot.candidate.copy()
+        # verification failed: the snapshot lied about the committed
+        # chain — fall back to the full rank and report it
+        snapshot.outcome = chain_method(n, count, method)
+        snapshot.replayed = int(count or 0)
     if chain_method(n, count, method) == "contract":
         return _order_contract(np.asarray(nxt), head, count,
                                k or CONTRACT_K)

@@ -60,6 +60,12 @@ class WriteSet:
         rows = np.unique(np.asarray(rows, np.int64))
         if rows.size == 0:
             return
+        if getattr(region, "snap", False):
+            # snapshot regions stay out of the mark/saved/dedup ledger —
+            # their lines land in FlushStats.snapshot_lines at drain
+            self._pending.setdefault(region.name, []).append((rows, 0,
+                                                              fresh))
+            return
         would = self.arena._rows_line_count(region.offset, region.rowbytes,
                                             rows)
         self._pending.setdefault(region.name, []).append((rows, would,
@@ -83,6 +89,7 @@ class WriteSet:
         ONE unordered phase (fresh rows home, rewrites into the target
         bank); ``include_meta=False`` then simply means "crash before
         the flip" — nothing drained is reachable until commit."""
+        self._drain_snapshots()
         if not self._pending:
             return
         if self.arena.commit_mode == "shadow":
@@ -98,6 +105,23 @@ class WriteSet:
             self._pending.clear()   # crash point: metadata marks are lost
         if flushed:
             self.arena.stats.epochs += 1
+
+    def _drain_snapshots(self) -> None:
+        """Ask each registered order-snapshot provider for its dirty
+        snapshot rows at EVERY flush, so a mid-commit crash leaves
+        byte-identical snapshot regions to a flushed-but-uncommitted
+        crash (the inter-shard commit-window invariant).  Providers are
+        idempotent — a flush with nothing newly dirty emits nothing —
+        and a record sealed at a non-commit flush names a generation
+        that may never commit; recovery's ``gen <= committed`` guard
+        plus verify-always adoption makes that harmless (DESIGN.md
+        §10)."""
+        arena = self.arena
+        if not arena._snap_providers:
+            return
+        for prov in arena._snap_providers:
+            for region, rows in prov():
+                self.mark(region, rows)
 
     def flush_phase(self, meta: bool) -> bool:
         """Flush only the data half (``meta=False``) or only the
@@ -125,6 +149,11 @@ class WriteSet:
             would_lines = sum(w for _, w, _ in marks)
             marked_rows = sum(r.size for r, _, _ in marks)
             self._copy_rows(region, rows)
+            if region.snap:
+                arena._account_rows(region.offset, region.rowbytes, rows,
+                                    snap=True)
+                flushed_any = True
+                continue
             before = arena.stats.lines
             arena._account_rows(region.offset, region.rowbytes, rows)
             actual = arena.stats.lines - before
@@ -162,9 +191,13 @@ class WriteSet:
                 before = arena.stats.lines
                 if fr.size:
                     self._copy_rows(region, fr)
-                    arena._account_rows(region.offset, region.rowbytes, fr)
+                    arena._account_rows(region.offset, region.rowbytes, fr,
+                                        snap=region.snap)
                 if rew.size:
                     arena._shadow_write(region, rew)
+                if region.snap:
+                    flushed_any = True
+                    continue
                 actual = arena.stats.lines - before
                 arena.stats.saved_lines += max(0, would_lines - actual)
                 arena.stats.dedup_rows += \
@@ -213,6 +246,12 @@ class ShardedWriteSet:
         # line-aligned — every current region — the flushed-lines total
         # is shard-count-invariant too; sub-line rows split across
         # shards legitimately charge a shared line once PER FILE.)
+        if getattr(region, "snap", False):
+            ent = self._pending.get(region.name)
+            if ent is None:
+                ent = self._pending[region.name] = [[], 0, 0, []]
+            (ent[3] if fresh else ent[0]).append(rows)
+            return
         from repro.core.arena import Arena
         would = Arena._rows_line_count(0, region.rowbytes, rows)
         ent = self._pending.get(region.name)
@@ -229,7 +268,16 @@ class ShardedWriteSet:
     def discard(self) -> None:
         self._pending.clear()
 
+    def _drain_snapshots(self) -> None:
+        arena = self.arena
+        if not arena._snap_providers:
+            return
+        for prov in arena._snap_providers:
+            for region, rows in prov():
+                self.mark(region, rows)
+
     def flush(self, include_meta: bool = True) -> None:
+        self._drain_snapshots()
         if not self._pending:
             return
         arena = self.arena
@@ -267,7 +315,8 @@ class ShardedWriteSet:
             arrs = arrs + fresh_arrs    # barrier mode: the hint is moot
             rows = np.unique(np.concatenate(arrs)) if len(arrs) > 1 \
                 else arrs[0]
-            region_rows.append((region, rows, would, marked))
+            if not region.snap:     # snap lines stay off the ledger
+                region_rows.append((region, rows, would, marked))
             for sl, local in region._split(rows):
                 work.setdefault(sl.arena_index, []).append((sl, local))
 
@@ -279,7 +328,8 @@ class ShardedWriteSet:
             with shard.stall_scope():
                 for sl, local in work[s]:
                     self._copy_rows(sl, local)
-                    shard._account_rows(sl.offset, sl.rowbytes, local)
+                    shard._account_rows(sl.offset, sl.rowbytes, local,
+                                        snap=sl.snap)
             actual[s] = shard.stats.lines - before
 
         shards = sorted(work)
@@ -319,7 +369,9 @@ class ShardedWriteSet:
                 else np.empty(0, np.int64)
             # a row marked both ways is conservatively a rewrite
             fr = np.setdiff1d(fr, rew, assume_unique=True)
-            region_rows.append((would, marked, int(fr.size + rew.size)))
+            if not region.snap:     # snap lines stay off the ledger
+                region_rows.append((would, marked,
+                                    int(fr.size + rew.size)))
             for sl, local in region._split(rew):
                 work.setdefault(sl.arena_index, []).append(
                     (sl, np.sort(local), False))
@@ -337,7 +389,8 @@ class ShardedWriteSet:
                 for sl, local, fresh in work.get(s, ()):
                     if fresh:
                         self._copy_rows(sl, local)
-                        shard._account_rows(sl.offset, sl.rowbytes, local)
+                        shard._account_rows(sl.offset, sl.rowbytes, local,
+                                            snap=sl.snap)
                     else:
                         shard._shadow_write(sl, local)
             actual[s] = shard.stats.lines - before

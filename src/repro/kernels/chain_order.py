@@ -45,7 +45,7 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.core.recovery import CONTRACT_K, chain_method
+from repro.core.recovery import CONTRACT_K, ChainSnapshot, chain_method
 
 NULL = -1
 
@@ -392,12 +392,40 @@ def chain_tables_device(nxt: np.ndarray, bits: int, *,
     return tables, np.asarray(cnt, np.int64)
 
 
+def _snapshot_verify_device(nxt: np.ndarray, head: int, cand: np.ndarray,
+                            segments, seg_rows: int,
+                            interpret: bool) -> bool:
+    """Verify an order-snapshot candidate (DESIGN.md §10) with ONE
+    `gather_next` round: succ[i] = nxt[cand[i]] must equal cand[i+1]
+    for every internal link and NULL at the last element (the chain
+    must END there — that completeness check replaces the host
+    primitive's explicit count comparison, so the device path needs no
+    O(N) table build to adopt a snapshot).  NEXT is a function of node
+    id, so a candidate that passes IS the chain order from `head` —
+    duplicates would force nxt[cand[-1]] to be both NULL and a live
+    successor."""
+    n = np.asarray(nxt).shape[0]
+    if cand.size == 0 or cand[0] != head:
+        return False
+    if ((cand < 0) | (cand >= n)).any():
+        return False
+    sane = np.where((np.asarray(nxt) >= 0) & (np.asarray(nxt) < n),
+                    np.asarray(nxt), NULL)
+    succ = np.asarray(gather_next(jnp.asarray(sane, jnp.int32), cand,
+                                  segments=segments, seg_rows=seg_rows,
+                                  interpret=interpret), np.int64)
+    if succ[-1] != NULL:
+        return False                 # chain continues past the candidate
+    return bool(np.array_equal(succ[:-1], cand[1:]))
+
+
 def chain_order_device(nxt: np.ndarray, head: int, *,
                        segments: Optional[np.ndarray] = None,
                        seg_rows: int = 0,
                        method: str = "auto",
                        k: int = 0,
                        fuse: bool = True,
+                       snapshot: Optional[ChainSnapshot] = None,
                        interpret: bool = True) -> np.ndarray:
     """Full device-built chain order.  ``method`` — "double" (the
     doubling rounds run in the Pallas kernel; the final node-at-position
@@ -414,10 +442,29 @@ def chain_order_device(nxt: np.ndarray, head: int, *,
     of a sharded region (the per-shard persistent views, concatenated —
     no host re-gather); `head` and the returned order are global ids
     either way, on both methods (the contraction rank runs in
-    spine-index space, which is layout-free)."""
+    spine-index space, which is layout-free).
+
+    ``snapshot``: an order-snapshot candidate (core.recovery
+    .ChainSnapshot, DESIGN.md §10).  Verified with one `gather_next`
+    round; on success the candidate is returned directly (outcome
+    "snapshot") and the ranking is skipped entirely — on mismatch the
+    full device ranking runs (outcome = the ranking method, replayed =
+    full chain length), the same contract as the host primitive."""
     n = nxt.shape[0]
     if head < 0 or head >= n:
         return np.empty(0, np.int64)
+    if snapshot is not None:
+        cand = np.asarray(snapshot.candidate, np.int64).ravel()
+        if _snapshot_verify_device(nxt, head, cand, segments, seg_rows,
+                                   interpret):
+            snapshot.outcome = "snapshot"
+            return cand.copy()
+        snapshot.outcome = chain_method(n, None, method)
+        order = chain_order_device(nxt, head, segments=segments,
+                                   seg_rows=seg_rows, method=method, k=k,
+                                   fuse=fuse, interpret=interpret)
+        snapshot.replayed = int(order.size)
+        return order
     if chain_method(n, None, method) == "contract":
         return _order_device_contract(nxt, head, k or CONTRACT_K,
                                       segments, seg_rows, interpret,

@@ -30,8 +30,10 @@ from typing import Optional, Tuple
 import numpy as np
 
 from repro.core import reconstruct as rec
-from repro.core.arena import Arena, FlushStats
-from repro.core.recovery import chain_method, chain_order
+from repro.core.arena import (Arena, FlushStats, SNAP_SLOTS, SNAP_WORDS,
+                              snap_record_pack, snap_record_parse,
+                              snapshot_enabled)
+from repro.core.recovery import ChainSnapshot, chain_method, chain_order
 
 NULL = -1
 DATA_WORDS = 7
@@ -50,7 +52,8 @@ class DoublyLinkedList:
     """mode: "partly" | "full"."""
 
     def __init__(self, arena: Arena, capacity: int, mode: str = "partly",
-                 name: str = "dll", chain_method: str = "auto"):
+                 name: str = "dll", chain_method: str = "auto",
+                 snapshot: Optional[bool] = None):
         assert mode in ("partly", "full")
         self.mode = mode
         self.capacity = capacity
@@ -73,13 +76,40 @@ class DoublyLinkedList:
         self._ring = np.empty(capacity * 2, np.int64)  # order ring
         self._r0 = 0
         self._r1 = 0
+        # incremental order snapshots (DESIGN.md §10): a persisted mirror
+        # of the order ring plus a 4-slot sealed-record ring, appended to
+        # by a commit-time provider.  Degrades to OFF when the arena's
+        # layout was finalized without the snapshot regions (an older
+        # image, or REPRO_SNAPSHOT=0 at creation).
+        snap_on = snapshot_enabled(snapshot)
+        self.snapring = arena.regions.get(f"{name}.snapring")
+        self.snaprec = arena.regions.get(f"{name}.snaprec")
+        if snap_on and self.snapring is None and not arena._layout_final:
+            self.snapring = arena.region(f"{name}.snapring", np.int64,
+                                         (capacity * 2,),
+                                         router=("seg", SHARD_SEG))
+            self.snaprec = arena.region(f"{name}.snaprec", np.int64,
+                                        (SNAP_SLOTS, SNAP_WORDS))
+        self.snapshot = snap_on and self.snapring is not None
+        if self.snapshot:
+            self._snap_dirty = np.zeros(capacity * 2, bool)
+            self._snap_seq = 0
+            self._snap_resync = True   # first drain mirrors the window
+            self._snap_last = None     # (r0, r1, count) at last emit
+            arena.add_snapshot_provider(self._snap_emit)
 
     @staticmethod
-    def layout(capacity: int, mode: str = "partly", name: str = "dll"):
+    def layout(capacity: int, mode: str = "partly", name: str = "dll",
+               snapshot: Optional[bool] = None):
         row = 8 if mode == "partly" else 16
-        return {f"{name}.nodes": (np.int64, (capacity, row),
-                                  ("seg", SHARD_SEG)),
-                f"{name}.header": (np.int64, (1, 8))}
+        out = {f"{name}.nodes": (np.int64, (capacity, row),
+                                 ("seg", SHARD_SEG)),
+               f"{name}.header": (np.int64, (1, 8))}
+        if snapshot_enabled(snapshot):
+            out[f"{name}.snapring"] = (np.int64, (capacity * 2,),
+                                       ("seg", SHARD_SEG))
+            out[f"{name}.snaprec"] = (np.int64, (SNAP_SLOTS, SNAP_WORDS))
+        return out
 
     # ------------- views over the node rows -------------
     @property
@@ -153,6 +183,8 @@ class DoublyLinkedList:
             self._compact_ring()
         self._ring[self._r1:self._r1 + n] = ids
         self._r1 += n
+        if self.snapshot:
+            self._snap_dirty[self._r1 - n:self._r1] = True
         # ---- mark dirty (flushed once at epoch close) ----
         # fresh-range ids sit above the committed fresh-water mark, so
         # their bytes are dead in the committed image: shadow mode may
@@ -246,6 +278,9 @@ class DoublyLinkedList:
         live = self._ring[self._r0:self._r1]
         self._ring[: live.size] = live
         self._r0, self._r1 = 0, live.size
+        if self.snapshot:
+            # every slot moved: the persisted mirror diverges wholesale
+            self._snap_resync = True
 
     def _ring_pop(self, m: int) -> np.ndarray:
         out = np.empty(m, np.int64)
@@ -262,6 +297,8 @@ class DoublyLinkedList:
         window = self._ring[self._r0:self._r1]
         mask = np.isin(window, ids)
         window[mask] = NULL
+        if self.snapshot:
+            self._snap_dirty[self._r0 + np.nonzero(mask)[0]] = True
 
     # ------------- traversal / verification -------------
     def to_list(self) -> np.ndarray:
@@ -280,6 +317,43 @@ class DoublyLinkedList:
         window = self._ring[self._r0:self._r1]
         return window[window != NULL].copy()
 
+    # ------------- incremental order snapshots (DESIGN.md §10) -------
+    def _snap_emit(self):
+        """Commit-time snapshot provider: mirror the ring slots dirtied
+        since the last commit and seal one record line naming the window
+        and the generation this commit targets.  Slots never move
+        between compactions (appends write fresh slots, deletes punch
+        NULLs in place, pops only advance the record's r0), so the
+        per-commit delta is a few lines regardless of list size.
+
+        Idempotent: a flush with nothing newly dirty and an unchanged
+        window emits nothing, so the writeset can drain providers at
+        every epoch flush (not just commits) without a commit's own
+        flush adding bytes beyond the preceding epoch's — the
+        inter-shard commit-window byte-identity invariant."""
+        out = []
+        if self._snap_resync:
+            self._snap_dirty[:] = False
+            self._snap_dirty[self._r0:self._r1] = True
+            self._snap_resync = False
+        dirty = np.nonzero(self._snap_dirty)[0]
+        state = (self._r0, self._r1, int(self.header.vol[0, H_COUNT]))
+        if not dirty.size and state == self._snap_last:
+            return out
+        self._snap_last = state
+        if dirty.size:
+            self.snapring.vol[dirty] = self._ring[dirty]
+            out.append((self.snapring, dirty))
+            self._snap_dirty[:] = False
+        seq = self._snap_seq
+        self._snap_seq += 1
+        slot = seq % SNAP_SLOTS
+        self.snaprec.vol[slot] = snap_record_pack(
+            self.arena.generation + 1, seq, self._r0, self._r1,
+            int(self.header.vol[0, H_COUNT]))
+        out.append((self.snaprec, np.asarray([slot], np.int64)))
+        return out
+
     # ------------- crash / reconstruction -------------
     def reconstruct(self) -> None:
         """Rebuild all volatile redundancy from persistent fields only
@@ -288,10 +362,70 @@ class DoublyLinkedList:
         which loads the regions once and times the stage."""
         self.header.load()
         self.nodes.load()
+        if self.snapshot:
+            self.snapring.load()
+            self.snaprec.load()
         rec.get("pstruct.dll")(self)
 
     def flush_stats(self) -> FlushStats:
         return self.arena.stats
+
+
+def _snap_records(snaprec) -> list:
+    """Intact records in the persisted record ring, any order."""
+    return [r for r in (snap_record_parse(snaprec.vol[s])
+                        for s in range(SNAP_SLOTS)) if r is not None]
+
+
+def _snap_resume(d) -> None:
+    """Post-recovery provider state: resume the record sequence past
+    every intact slot (so newest-by-seq selection keeps working across
+    restarts) and re-mirror the whole window at the next commit (the
+    rebuilt ring starts at slot 0, wherever the mirror's window was)."""
+    recs = _snap_records(d.snaprec)
+    d._snap_seq = (max(r[1] for r in recs) + 1) if recs else 0
+    d._snap_dirty[:] = False
+    d._snap_resync = True
+    d._snap_last = None
+
+
+def _snap_candidate(d, count: int) -> Optional[ChainSnapshot]:
+    """Candidate order from the newest intact record whose generation is
+    committed: the persisted window's live slots, plus a bounded local
+    walk along NEXT past the snapshot tail (the suffix of appends the
+    record predates), minus any front overhang (pops since the record).
+    Every failure mode returns None — chain_order's verify-always pass
+    is what makes adoption safe, this only has to be cheap."""
+    committed = d.arena.header_generation()
+    best = None
+    for r in _snap_records(d.snaprec):
+        if r[0] > committed:        # sealed by a generation that never
+            continue                # committed (crash inside the window)
+        if best is None or r[1] > best[1]:
+            best = r
+    if best is None:
+        return None
+    _, _, r0, r1, _, _ = best
+    if not (0 <= r0 <= r1 <= d.snapring.shape[0]):
+        return None
+    window = d.snapring.vol[r0:r1]
+    base = window[window != NULL]
+    if base.size == 0 or ((base < 0) | (base >= d.capacity)).any():
+        return None
+    nxt = d.next
+    suffix = []
+    cur = int(base[-1])
+    while len(suffix) < count:
+        nx = int(nxt[cur])
+        if nx < 0 or nx >= d.capacity:
+            break
+        suffix.append(nx)
+        cur = nx
+    cand = np.concatenate([base, np.asarray(suffix, np.int64)]) \
+        if suffix else np.asarray(base, np.int64)
+    if cand.size < count:
+        return None
+    return ChainSnapshot(cand[cand.size - count:], replayed=len(suffix))
 
 
 @rec.register("pstruct.dll")
@@ -310,16 +444,20 @@ def _reconstruct_dll(d: "DoublyLinkedList") -> dict:
     count = int(hv[H_COUNT])
     head = int(hv[H_HEAD])
     d.prev = np.full(d.capacity, NULL, np.int64)
+    snap_on = getattr(d, "snapshot", False)
     if count == 0:
         hv[H_TAIL] = NULL
         hv[H_FRESH] = 0
         d._free = []
         d._r0 = d._r1 = 0
+        if snap_on:
+            _snap_resume(d)
         return {"mode": d.mode, "count": 0}
     # The committed COUNT bounds the walk: rows appended by a torn epoch
     # (data flushed, header not) stay unreachable.
     method = getattr(d, "chain_method", "auto")
-    order = chain_order(d.next, head, count, method=method)
+    snap = _snap_candidate(d, count) if snap_on else None
+    order = chain_order(d.next, head, count, method=method, snapshot=snap)
     d.prev[order[1:]] = order[:-1]
     hv[H_TAIL] = order[-1]
     live = np.zeros(d.capacity, bool)
@@ -335,8 +473,17 @@ def _reconstruct_dll(d: "DoublyLinkedList") -> dict:
     if d.mode == "full":
         d.nodes.vol[order[1:], DATA_WORDS + 1] = order[:-1]
         d.nodes.vol[order[0], DATA_WORDS + 1] = NULL
-    return {"mode": d.mode, "count": count,
-            "chain": chain_method(d.capacity, count, method)}
+    detail = {"mode": d.mode, "count": count,
+              "chain": chain_method(d.capacity, count, method)}
+    if snap_on:
+        # outcome: "snapshot" (seeded, suffix-only replay) or the full
+        # fallback rank the verify pass forced; replayed = rows walked
+        detail["chain"] = snap.outcome if snap is not None \
+            else detail["chain"]
+        detail["replayed"] = snap.replayed if snap is not None \
+            and snap.outcome == "snapshot" else count
+        _snap_resume(d)
+    return detail
 
 
 def order_from_next(nxt: np.ndarray, head: int, count: int) -> np.ndarray:

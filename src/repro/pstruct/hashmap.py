@@ -29,7 +29,9 @@ from typing import Optional, Tuple
 import numpy as np
 
 from repro.core import reconstruct as rec
-from repro.core.arena import Arena, FlushStats
+from repro.core.arena import (Arena, FlushStats, SNAP_SLOTS, SNAP_WORDS,
+                              snap_record_pack, snap_record_parse,
+                              snapshot_enabled)
 from repro.core.recovery import chain_walk
 
 NULL = -1
@@ -51,7 +53,8 @@ def hash64(keys: np.ndarray) -> np.ndarray:
 class Hashmap:
     def __init__(self, arena: Arena, capacity: int, mode: str = "partly",
                  load_factor: float = 0.75, name: str = "hm",
-                 chain_method: str = "auto"):
+                 chain_method: str = "auto",
+                 snapshot: Optional[bool] = None):
         assert mode in ("partly", "full")
         self.mode = mode
         self.capacity = capacity
@@ -87,16 +90,44 @@ class Hashmap:
         self.buckets = np.full(self.n_buckets, NULL, np.int64)  # volatile
         self.chain = np.full(capacity, NULL, np.int64)  # volatile next
         self.hashes = np.zeros(capacity, np.uint64)  # volatile cached hash
+        # incremental order snapshots (DESIGN.md §10): persisted mirrors
+        # of the volatile bucket heads + chain links, plus a 4-slot
+        # sealed-record ring — recovery adopts them after verification,
+        # replacing the O(N log N) rebuild argsort with O(N) gathers
+        snap_on = snapshot_enabled(snapshot)
+        self.snapbkt = arena.regions.get(f"{name}.snapbkt")
+        self.snapchain = arena.regions.get(f"{name}.snapchain")
+        self.snaprec = arena.regions.get(f"{name}.snaprec")
+        if snap_on and self.snapbkt is None and not arena._layout_final:
+            self.snapbkt = arena.region(f"{name}.snapbkt", np.int64,
+                                        (n_max,), router=("seg", 64))
+            self.snapchain = arena.region(f"{name}.snapchain", np.int64,
+                                          (capacity,), router=("hash",))
+            self.snaprec = arena.region(f"{name}.snaprec", np.int64,
+                                        (SNAP_SLOTS, SNAP_WORDS))
+        self.snapshot = snap_on and self.snapbkt is not None
+        if self.snapshot:
+            self._snap_bkt_dirty = np.zeros(n_max, bool)
+            self._snap_chain_dirty = np.zeros(capacity, bool)
+            self._snap_seq = 0
+            self._snap_resync = True
+            self._snap_last = None     # (nb, fresh, size) at last emit
+            arena.add_snapshot_provider(self._snap_emit)
 
     @staticmethod
     def layout(capacity: int, mode: str = "partly", name: str = "hm",
-               load_factor: float = 0.75):
+               load_factor: float = 0.75,
+               snapshot: Optional[bool] = None):
         row = 8 if mode == "partly" else 16
         out = {f"{name}.entries": (np.int64, (capacity, row), ("hash",)),
                f"{name}.header": (np.int64, (1, 8))}
+        n_max = _next_pow2(max(16, int(capacity / load_factor)))
         if mode == "full":
-            n_max = _next_pow2(max(16, int(capacity / load_factor)))
             out[f"{name}.buckets"] = (np.int64, (n_max, 1), ("seg", 64))
+        if snapshot_enabled(snapshot):
+            out[f"{name}.snapbkt"] = (np.int64, (n_max,), ("seg", 64))
+            out[f"{name}.snapchain"] = (np.int64, (capacity,), ("hash",))
+            out[f"{name}.snaprec"] = (np.int64, (SNAP_SLOTS, SNAP_WORDS))
         return out
 
     def _persist_buckets(self, bkts: np.ndarray) -> None:
@@ -208,6 +239,10 @@ class Hashmap:
         empty = tails == NULL
         self.buckets[bs[grp_start][empty]] = heads[empty]
         self.chain[tails[~empty]] = heads[~empty]
+        if self.snapshot:
+            self._snap_chain_dirty[ids_s] = True
+            self._snap_chain_dirty[tails[~empty]] = True
+            self._snap_bkt_dirty[bs[grp_start][empty]] = True
         if self.mode == "full":
             self.entries.vol[ids_s, 9] = self.chain[ids_s]
             link_dirty = tails[~empty]
@@ -260,6 +295,9 @@ class Hashmap:
         bkts = np.unique((hs & np.uint64(self.n_buckets - 1)).astype(np.int64))
         members = chain_walk(self.chain, self.buckets[bkts],
                              method=self.chain_method)
+        if self.snapshot:
+            self._snap_bkt_dirty[bkts] = True
+            self._snap_chain_dirty[slots] = True
         if members.shape[1] == 0:
             self.chain[slots] = NULL
             return
@@ -280,11 +318,15 @@ class Hashmap:
             changed = self.chain[src] != dst
             self.chain[src] = dst
             chain_dirty.append(src[changed])
+            if self.snapshot:
+                self._snap_chain_dirty[src[changed]] = True
         nz = np.nonzero(cnt > 0)[0]
         last = comp[nz, cnt[nz] - 1]
         last_changed = self.chain[last] != NULL
         self.chain[last] = NULL
         chain_dirty.append(last[last_changed])
+        if self.snapshot:
+            self._snap_chain_dirty[last[last_changed]] = True
         self.chain[slots] = NULL
         if self.mode == "full":
             dirty = np.unique(np.concatenate(chain_dirty)) \
@@ -316,6 +358,10 @@ class Hashmap:
         live = np.nonzero(self.keys[:fresh] != KEY_NULL)[0]
         self.buckets = np.full(self.n_buckets, NULL, np.int64)
         self.chain = np.full(self.capacity, NULL, np.int64)
+        if self.snapshot:
+            # every link potentially moved: re-mirror wholesale at the
+            # next commit (grows are O(log N) rare, so this amortizes)
+            self._snap_resync = True
         if live.size == 0:
             return
         h = self.hashes[live]
@@ -328,6 +374,51 @@ class Hashmap:
         if ls.size:
             self.chain[ls[-1]] = NULL
 
+    # -------- incremental order snapshots (DESIGN.md §10) --------
+    def _snap_emit(self):
+        """Commit-time provider: mirror the bucket heads and chain links
+        dirtied since the last commit, then seal one record line naming
+        (n_buckets, fresh, size) for the generation this commit
+        targets.
+
+        Idempotent: a flush with nothing newly dirty and unchanged
+        (n_buckets, fresh, size) emits nothing — the writeset drains
+        providers at every epoch flush, and a commit's own flush must
+        not add bytes beyond the preceding epoch's (the inter-shard
+        commit-window byte-identity invariant)."""
+        out = []
+        hv = self.header.vol[0]
+        fresh = int(hv[H_FRESH])
+        if self._snap_resync:
+            self._snap_chain_dirty[:] = False
+            self._snap_bkt_dirty[:] = False
+            self._snap_chain_dirty[:fresh] = True
+            self._snap_bkt_dirty[:self.n_buckets] = True
+            self._snap_resync = False
+        state = (self.n_buckets, fresh, int(hv[H_SIZE]))
+        if state == self._snap_last and not self._snap_chain_dirty.any() \
+                and not self._snap_bkt_dirty.any():
+            return out
+        self._snap_last = state
+        cd = np.nonzero(self._snap_chain_dirty)[0]
+        if cd.size:
+            self.snapchain.vol[cd] = self.chain[cd]
+            out.append((self.snapchain, cd))
+            self._snap_chain_dirty[:] = False
+        bd = np.nonzero(self._snap_bkt_dirty)[0]
+        if bd.size:
+            self.snapbkt.vol[bd] = self.buckets[bd]
+            out.append((self.snapbkt, bd))
+            self._snap_bkt_dirty[:] = False
+        seq = self._snap_seq
+        self._snap_seq += 1
+        slot = seq % SNAP_SLOTS
+        self.snaprec.vol[slot] = snap_record_pack(
+            self.arena.generation + 1, seq, self.n_buckets, fresh,
+            int(hv[H_SIZE]))
+        out.append((self.snaprec, np.asarray([slot], np.int64)))
+        return out
+
     # -------- crash / reconstruction --------
     def reconstruct(self) -> None:
         """Thin shim over the registered pure reconstructor — recovery
@@ -335,6 +426,10 @@ class Hashmap:
         the regions once and times the stage."""
         self.header.load()
         self.entries.load()
+        if self.snapshot:
+            self.snapbkt.load()
+            self.snapchain.load()
+            self.snaprec.load()
         rec.get("pstruct.hashmap")(self)
 
     def check_against(self, ref: dict) -> bool:
@@ -349,12 +444,125 @@ class Hashmap:
         return self.arena.stats
 
 
+def _hm_snap_records(snaprec) -> list:
+    return [r for r in (snap_record_parse(snaprec.vol[s])
+                        for s in range(SNAP_SLOTS)) if r is not None]
+
+
+def _hm_snap_resume(h: "Hashmap") -> None:
+    recs = _hm_snap_records(h.snaprec)
+    h._snap_seq = (max(r[1] for r in recs) + 1) if recs else 0
+    h._snap_bkt_dirty[:] = False
+    h._snap_chain_dirty[:] = False
+    h._snap_resync = True
+    h._snap_last = None
+
+
+def _hm_snap_adopt(h: "Hashmap", fresh: int, idx: np.ndarray
+                   ) -> Optional[int]:
+    """Seed the bucket chains from the newest committed snapshot, link
+    the suffix of slab rows younger than the record, VERIFY the result
+    is a canonical chain assembly (every live row exactly once, in its
+    hash bucket, ascending slab order — the invariant both _link and
+    _rebuild_chains maintain), and scatter it into fresh volatile
+    arrays.  The snapshot carries the PRE-CRASH bucket basis (rec_nb),
+    so adoption also restores n_buckets — same logical map, no argsort
+    and no immediate regrow churn.  Returns the replayed-suffix length
+    on adoption, None on any mismatch (callers fall back to the full
+    size-derived rebuild)."""
+    committed = h.arena.header_generation()
+    best = None
+    for r in _hm_snap_records(h.snaprec):
+        if r[0] > committed:
+            continue
+        if best is None or r[1] > best[1]:
+            best = r
+    if best is None:
+        return None
+    _, _, rec_nb, rec_fresh, _, _ = best
+    if not (16 <= rec_nb <= h.n_buckets_max and rec_nb & (rec_nb - 1) == 0):
+        return None
+    if not 0 <= rec_fresh <= fresh:
+        return None
+    mask = np.uint64(rec_nb - 1)
+    cand_bkt = np.array(h.snapbkt.vol[:rec_nb], np.int64).reshape(-1)
+    cand_chain = np.array(h.snapchain.vol, np.int64).reshape(-1)
+    # local-walk only the suffix: rows the record predates were appended
+    # at their bucket's chain tail in ascending slab order — replay that
+    sfx = idx[idx >= rec_fresh]
+    if sfx.size:
+        b = (hash64(h.keys[sfx]) & mask).astype(np.int64)
+        order = np.argsort(b, kind="stable")
+        bs, ids_s = b[order], sfx[order]
+        grp_start = np.concatenate([[True], bs[1:] != bs[:-1]])
+        # tails of the affected buckets, walked over the candidate
+        # arrays (bounded: torn links can cycle, so cap the rounds)
+        tb = bs[grp_start]
+        cur = cand_bkt[tb]
+        tails = np.full(tb.size, NULL, np.int64)
+        for _ in range(fresh + 1):
+            ok = (cur >= 0) & (cur < h.capacity) & (cur < rec_fresh)
+            if not ok.any():
+                break
+            tails[ok] = cur[ok]
+            nxt = cand_chain[np.where(ok, cur, 0)]
+            cur = np.where(ok, nxt, NULL)
+        else:
+            return None                       # never terminated: cycle
+        cand_chain[ids_s[:-1]] = np.where(~grp_start[1:], ids_s[1:], NULL)
+        cand_chain[ids_s[-1]] = NULL
+        heads = ids_s[grp_start]
+        empty = tails == NULL
+        cand_bkt[tb[empty]] = heads[empty]
+        cand_chain[tails[~empty]] = heads[~empty]
+    # verify-always: materialize every chain and check it IS the
+    # canonical state (one O(N) walk — the saving over the O(N log N)
+    # argsort is the point of the seed)
+    try:
+        members = chain_walk(cand_chain, cand_bkt,
+                             method=h.chain_method)
+    except RuntimeError:
+        return None                           # cycle in a torn chain
+    valid = members != NULL
+    flat = members[valid]
+    if flat.size != idx.size:
+        return None
+    if flat.size:
+        if ((flat < 0) | (flat >= fresh)).any():
+            return None
+        if (h.keys[flat] == KEY_NULL).any():
+            return None
+        want_b = (hash64(h.keys[flat]) & mask).astype(np.int64)
+        got_b = np.broadcast_to(
+            np.arange(rec_nb)[:, None], members.shape)[valid]
+        if not np.array_equal(want_b, got_b):
+            return None
+        # ascending slab order within each bucket row (rules out both
+        # misordering and duplicates: a dupe must share a bucket)
+        if members.shape[1] > 1:
+            step = valid[:, 1:]
+            if (members[:, 1:][step] <= members[:, :-1][step]).any():
+                return None
+    # adopt: restore the record's basis and scatter the verified chains
+    h.n_buckets = int(rec_nb)
+    h.buckets = np.full(h.n_buckets, NULL, np.int64)
+    h.chain = np.full(h.capacity, NULL, np.int64)
+    if members.shape[1]:
+        h.buckets[valid[:, 0]] = members[valid[:, 0], 0]
+        if members.shape[1] > 1:
+            step = valid[:, 1:]
+            h.chain[members[:, :-1][step]] = members[:, 1:][step]
+    return int(sfx.size)
+
+
 @rec.register("pstruct.hashmap")
 def _reconstruct_hashmap(h: "Hashmap") -> dict:
     """Pure rebuild (paper §IV-E3): SIZE + dense (KEY, VALUE) rows ->
     full hashmap.  Scan the slab rows [0, fresh) in one vectorized pass,
     drop NULL keys, recompute hashes, re-derive the bucket count from
-    SIZE and the load factor, and rebuild chains in slab order."""
+    SIZE and the load factor, and rebuild chains in slab order — seeded
+    from the newest committed order snapshot when one verifies
+    (DESIGN.md §10)."""
     hv = h.header.vol[0]
     if hv[H_FLAG] != 1:
         # uninitialized image recovers as an empty map (§IV-E3 validity
@@ -368,8 +576,17 @@ def _reconstruct_hashmap(h: "Hashmap") -> dict:
     h.hashes = np.zeros(h.capacity, np.uint64)
     idx = np.nonzero(live)[0]
     h.hashes[idx] = hash64(h.keys[idx])
-    h._rebuild_chains()
-    return {"mode": h.mode, "size": size, "live": int(idx.size)}
+    detail = {"mode": h.mode, "size": size, "live": int(idx.size)}
+    snap_on = getattr(h, "snapshot", False)
+    replayed = _hm_snap_adopt(h, fresh, idx) if snap_on else None
+    if replayed is None:
+        h._rebuild_chains()
+    if snap_on:
+        detail["chain"] = "snapshot" if replayed is not None else "rebuild"
+        detail["replayed"] = replayed if replayed is not None \
+            else int(idx.size)
+        _hm_snap_resume(h)
+    return detail
 
 
 def _next_pow2(x: int) -> int:

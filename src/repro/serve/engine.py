@@ -66,6 +66,17 @@ class EngineConfig:
     # unlinks, LRU ring scan): doubling vs contraction list ranking
     # (core.recovery.chain_method, DESIGN.md §8)
     chain_method: str = "auto"
+    # Incremental order snapshots (DESIGN.md §10) for the request
+    # hashmap and the paged-KV LRU: None defers to REPRO_SNAPSHOT,
+    # True/False overrides.  Gates TTFT-after-crash — recovery replays
+    # only the suffix of rows younger than the newest committed
+    # snapshot instead of ranking the whole chain.
+    snapshot: Optional[bool] = None
+    # Page-pool capacity override (None = the max_batch * s_max /
+    # page_tokens working-set minimum).  Capacity planning headroom —
+    # and the axis the --snapshot-slo bench grows 10x to show recovery
+    # cost tracking the LIVE suffix, not the pool size.
+    n_pages: Optional[int] = None
 
 
 class ServingEngine:
@@ -74,7 +85,8 @@ class ServingEngine:
         self.model = model
         self.params = params
         self.cfg = cfg
-        layout = dict(Hashmap.layout(cfg.max_requests, cfg.mode, name="req"))
+        layout = dict(Hashmap.layout(cfg.max_requests, cfg.mode, name="req",
+                                     snapshot=cfg.snapshot))
         # token-log rows stripe slot-per-shard: re-prefill after a crash
         # reads each slot's prompt from its own shard file
         layout["tokens"] = (np.int32, (cfg.max_batch, cfg.s_max),
@@ -82,13 +94,15 @@ class ServingEngine:
         self.arena = open_arena(arena_path, layout, n_shards=cfg.n_shards,
                                 commit_mode=cfg.commit_mode)
         self.table = Hashmap(self.arena, cfg.max_requests, cfg.mode,
-                             name="req", chain_method=cfg.chain_method)
+                             name="req", chain_method=cfg.chain_method,
+                             snapshot=cfg.snapshot)
         self.tok_region = self.arena.regions["tokens"]
         self.paging = PagedAllocator(PagedConfig(
-            n_pages=cfg.max_batch * (cfg.s_max // cfg.page_tokens),
+            n_pages=max(cfg.n_pages or 0,
+                        cfg.max_batch * (cfg.s_max // cfg.page_tokens)),
             page_tokens=cfg.page_tokens, mode=cfg.mode,
             n_shards=cfg.n_shards, commit_mode=cfg.commit_mode,
-            chain_method=cfg.chain_method))
+            chain_method=cfg.chain_method, snapshot=cfg.snapshot))
         # device state (DERIVABLE)
         self.cache = model.init_cache(cfg.max_batch, cfg.s_max)
         self.pos = np.zeros(cfg.max_batch, np.int64)       # per-slot length
@@ -250,8 +264,10 @@ class ServingEngine:
         mgr = RecoveryManager(self.arena, self.paging.arena)
         mgr.add("req_table", "pstruct.hashmap", self.table,
                 regions=req_regions)
-        mgr.add("lru", "pstruct.dll", self.paging.lru,
-                regions=("lru.nodes", "lru.header"))
+        lru_regions = ("lru.nodes", "lru.header")
+        if self.paging.lru.snapshot:
+            lru_regions += ("lru.snapring", "lru.snaprec")
+        mgr.add("lru", "pstruct.dll", self.paging.lru, regions=lru_regions)
         mgr.add("pages", "serve.paged_alloc", self.paging,
                 depends=("lru",), regions=("lru.nodes",))
         mgr.add("engine", "serve.engine", self,

@@ -36,6 +36,12 @@ class PagedConfig:
     # to contraction list ranking once the page pool crosses the
     # jump-table cache crossover (core.recovery.chain_method, §8)
     chain_method: str = "auto"
+    # incremental order snapshots (DESIGN.md §10): None defers to the
+    # REPRO_SNAPSHOT env gate; True/False overrides it.  With snapshots
+    # on, recovery seeds the LRU order from the newest committed
+    # snapshot and replays only the suffix — TTFT-after-crash stays flat
+    # as the page pool grows.
+    snapshot: Optional[bool] = None
 
 
 class PagedAllocator:
@@ -49,14 +55,20 @@ class PagedAllocator:
 
     def __init__(self, cfg: PagedConfig, path: Optional[str] = None):
         self.cfg = cfg
-        layout = DoublyLinkedList.layout(cfg.n_pages, cfg.mode, name="lru")
+        layout = DoublyLinkedList.layout(cfg.n_pages, cfg.mode, name="lru",
+                                         snapshot=cfg.snapshot)
         self.arena = open_arena(path, layout, n_shards=cfg.n_shards,
                                 commit_mode=cfg.commit_mode)
         self.lru = DoublyLinkedList(self.arena, cfg.n_pages, cfg.mode,
                                     name="lru",
-                                    chain_method=cfg.chain_method)
+                                    chain_method=cfg.chain_method,
+                                    snapshot=cfg.snapshot)
         self.page_of_node: Dict[int, int] = {}
-        self.pages_free: List[int] = list(range(cfg.n_pages))
+        # free pages as a numpy stack (top = end): recovery rebuilds it
+        # with one nonzero() instead of materializing an O(n_pages)
+        # Python list on the TTFT-after-crash path
+        self.pages_free: np.ndarray = np.arange(cfg.n_pages,
+                                                dtype=np.int64)
         self.owner: np.ndarray = np.full(cfg.n_pages, -1, np.int64)
         self.last_recovery: Optional[RecoveryReport] = None
 
@@ -69,8 +81,9 @@ class PagedAllocator:
         with self.arena.epoch():
             if len(self.pages_free) < n:
                 self._evict(n - len(self.pages_free))
-            pages = np.asarray([self.pages_free.pop() for _ in range(n)],
-                               np.int64)
+            top = len(self.pages_free) - n
+            pages = self.pages_free[top:][::-1].copy()
+            self.pages_free = self.pages_free[:top]
             vals = np.zeros((n, 7), np.int64)
             vals[:, 0] = pages
             vals[:, 1] = request_id
@@ -93,7 +106,7 @@ class PagedAllocator:
             for nd in nodes:
                 self.page_of_node.pop(nd, None)
             self.owner[pages] = -1
-            self.pages_free.extend(pages.tolist())
+            self.pages_free = np.concatenate([self.pages_free, pages])
             self.arena.commit()
 
     def _evict(self, n: int) -> np.ndarray:
@@ -101,7 +114,7 @@ class PagedAllocator:
         pages = np.asarray([self.page_of_node.pop(int(nd)) for nd in nodes],
                            np.int64)
         self.owner[pages] = -1
-        self.pages_free.extend(pages.tolist())
+        self.pages_free = np.concatenate([self.pages_free, pages])
         return pages
 
     def pages_of(self, request_id: int) -> np.ndarray:
@@ -118,8 +131,10 @@ class PagedAllocator:
         callbacks pass through to the manager.  Returns seconds (the
         full RecoveryReport lands in ``last_recovery``)."""
         mgr = RecoveryManager(self.arena)
-        mgr.add("lru", "pstruct.dll", self.lru,
-                regions=("lru.nodes", "lru.header"))
+        lru_regions = ("lru.nodes", "lru.header")
+        if self.lru.snapshot:
+            lru_regions += ("lru.snapring", "lru.snaprec")
+        mgr.add("lru", "pstruct.dll", self.lru, regions=lru_regions)
         mgr.add("pages", "serve.paged_alloc", self, depends=("lru",),
                 regions=("lru.nodes",))
         report = mgr.recover(concurrency=concurrency, on_stage=on_stage)
@@ -137,7 +152,10 @@ def _reconstruct_paged_alloc(pa: PagedAllocator) -> dict:
     pa.page_of_node = dict(zip(order.tolist(), pages.tolist()))
     pa.owner = np.full(pa.cfg.n_pages, -1, np.int64)
     pa.owner[pages] = pa.lru.data[order, 1]
-    free = ~np.isin(np.arange(pa.cfg.n_pages), pages)
-    pa.pages_free = np.nonzero(free)[0].tolist()
+    # boolean scatter, not np.isin: isin sorts both sides, an O(N log N)
+    # constant that lands on the TTFT-after-crash path at large pools
+    free = np.ones(pa.cfg.n_pages, bool)
+    free[pages] = False
+    pa.pages_free = np.nonzero(free)[0].astype(np.int64)
     return {"pages_live": int(pages.size),
             "pages_free": int(pa.cfg.n_pages - pages.size)}
