@@ -83,6 +83,9 @@ class FlushStats:
     snapshot_lines: int = 0  # order-snapshot lines (DESIGN.md §10) — kept
                              # OUT of `lines`/`saved_lines` so partly-vs-
                              # full accounting stays comparable across PRs
+    journal_lines: int = 0   # request-journal ring lines (DESIGN.md §11) —
+                             # same separation: journal-off data accounting
+                             # is bit-identical to journal-on
 
     def snapshot(self) -> "FlushStats":
         return dataclasses.replace(self)
@@ -108,6 +111,11 @@ class Region:
         # a torn data-phase crash never leaves half a snapshot behind the
         # committed header.
         self.snap = ".snap" in name
+        # Request-journal regions (DESIGN.md §11): the append ring is a
+        # data-phase region (entries become visible only through the
+        # committed head counter on a metadata line) whose lines are
+        # accounted in FlushStats.journal_lines.
+        self.jrnl = ".jrnl" in name
         # Metadata regions (structure headers) flush AFTER data regions
         # within an epoch — data-before-metadata ordering (DESIGN.md §2).
         self.meta = (name.endswith("header") or self.snap) \
@@ -149,7 +157,7 @@ class Region:
         pv = self._pview()
         pv[rows] = self._gather(rows)
         self.arena._account_rows(self.offset, self.rowbytes, rows,
-                                 snap=self.snap)
+                                 snap=self.snap, jrnl=self.jrnl)
 
     def mark_rows(self, rows: np.ndarray, fresh: bool = False) -> None:
         """Add rows to the arena's write set (flushed once, deduplicated,
@@ -177,7 +185,7 @@ class Region:
         pv[lo:hi] = self._gather_range(lo, hi)
         self.arena._account_range(self.offset + lo * self.rowbytes,
                                   (hi - lo) * self.rowbytes,
-                                  snap=self.snap)
+                                  snap=self.snap, jrnl=self.jrnl)
 
     def persist_all(self) -> None:
         self.persist_range(0, self.shape[0])
@@ -425,14 +433,15 @@ class Arena:
         mask[rows] = True
         self._shadow_mirror(region, b)[rows] = region._gather(rows)
         self._account_rows(region._shadow_off[b], region.rowbytes, rows,
-                           snap=region.snap)
+                           snap=region.snap, jrnl=region.jrnl)
         if new.size:
             cnt = self._shadow_counts[b]
             ents = self._shadow_entries(b)
             ents[cnt:cnt + new.size, 0] = self._region_ids[region.name]
             ents[cnt:cnt + new.size, 1] = new
             self._account_range(self._shadow_ent_off[b] + cnt * 16,
-                                int(new.size) * 16, snap=region.snap)
+                                int(new.size) * 16, snap=region.snap,
+                                jrnl=region.jrnl)
             self._shadow_counts[b] = cnt + int(new.size)
 
     def _shadow_collapse(self, limit: Optional[int] = None) -> bool:
@@ -458,7 +467,7 @@ class Arena:
             region = self.regions[name]
             region._pview()[rows] = self._shadow_mirror(region, b)[rows]
             self._account_rows(region.offset, region.rowbytes, rows,
-                               snap=region.snap)
+                               snap=region.snap, jrnl=region.jrnl)
         if done:
             self._shadow_collapsed[b] = True
         return done
@@ -591,7 +600,7 @@ class Arena:
 
     # -- accounting ---------------------------------------------------------
     def _account_range(self, byte_off: int, nbytes: int,
-                       snap: bool = False) -> None:
+                       snap: bool = False, jrnl: bool = False) -> None:
         lo = (byte_off // LINE) * LINE
         hi = _align(byte_off + nbytes, LINE)
         lines = (hi - lo) // LINE
@@ -600,6 +609,11 @@ class Arena:
             # stall) but lands in its own counter so data-line accounting
             # stays bit-comparable to snapshot-off runs
             self.stats.snapshot_lines += lines
+            self._synth(lines)
+            return
+        if jrnl:
+            # journal rings get the same treatment (DESIGN.md §11)
+            self.stats.journal_lines += lines
             self._synth(lines)
             return
         self.stats.lines += lines
@@ -622,10 +636,14 @@ class Arena:
         return int(np.sum(np.maximum(0, ends - starts + 1)))
 
     def _account_rows(self, base: int, rowbytes: int, rows: np.ndarray,
-                      snap: bool = False) -> None:
+                      snap: bool = False, jrnl: bool = False) -> None:
         lines = self._rows_line_count(base, rowbytes, rows)
         if snap:
             self.stats.snapshot_lines += lines
+            self._synth(lines)
+            return
+        if jrnl:
+            self.stats.journal_lines += lines
             self._synth(lines)
             return
         self.stats.lines += lines
@@ -723,6 +741,16 @@ def snapshot_enabled(flag: Optional[bool] = None) -> bool:
     if flag is not None:
         return bool(flag)
     return os.environ.get("REPRO_SNAPSHOT", "1") != "0"
+
+
+def journal_enabled(flag: Optional[bool] = None) -> bool:
+    """Resolve a structure's ``journal=`` ctor arg: an explicit flag
+    wins; ``None`` defers to the ``REPRO_JOURNAL`` env axis (default
+    on).  Journal-off layouts and accounting are bit-identical to the
+    pre-journal substrate (DESIGN.md §11)."""
+    if flag is not None:
+        return bool(flag)
+    return os.environ.get("REPRO_JOURNAL", "1") != "0"
 
 
 def snap_checksum(rec: np.ndarray) -> int:
@@ -867,6 +895,7 @@ class ShardedRegion:
         self.dtype = np.dtype(dtype)
         self.shape = tuple(shape)
         self.snap = ".snap" in name
+        self.jrnl = ".jrnl" in name
         self.meta = (name.endswith("header") or self.snap) \
             if meta is None else meta
         self.rowbytes = int(self.dtype.itemsize *

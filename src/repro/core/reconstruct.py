@@ -15,7 +15,11 @@ core/recovery.py consumes the registry by name, in dependency order):
   object with its regions already loaded from persistent memory;
 * "serve.paged_alloc" / "serve.engine" — the paged-KV allocator's page
   metadata and the serving engine's batched slab-scan + re-prefill
-  (serve/kvcache.py, serve/engine.py).
+  (serve/kvcache.py, serve/engine.py);
+* "serve.journal" / "serve.feature_store" — the request journal's rid
+  index replayed from the committed descriptor window, and the feature
+  store's hot rows + apply counters replayed from the committed sample
+  log (serve/journal.py, serve/feature_store.py, DESIGN.md §11).
 """
 from __future__ import annotations
 

@@ -60,9 +60,10 @@ class WriteSet:
         rows = np.unique(np.asarray(rows, np.int64))
         if rows.size == 0:
             return
-        if getattr(region, "snap", False):
-            # snapshot regions stay out of the mark/saved/dedup ledger —
-            # their lines land in FlushStats.snapshot_lines at drain
+        if getattr(region, "snap", False) or getattr(region, "jrnl", False):
+            # snapshot and journal regions stay out of the mark/saved/
+            # dedup ledger — their lines land in FlushStats.snapshot_lines
+            # / journal_lines at drain
             self._pending.setdefault(region.name, []).append((rows, 0,
                                                               fresh))
             return
@@ -149,9 +150,9 @@ class WriteSet:
             would_lines = sum(w for _, w, _ in marks)
             marked_rows = sum(r.size for r, _, _ in marks)
             self._copy_rows(region, rows)
-            if region.snap:
+            if region.snap or region.jrnl:
                 arena._account_rows(region.offset, region.rowbytes, rows,
-                                    snap=True)
+                                    snap=region.snap, jrnl=region.jrnl)
                 flushed_any = True
                 continue
             before = arena.stats.lines
@@ -192,10 +193,10 @@ class WriteSet:
                 if fr.size:
                     self._copy_rows(region, fr)
                     arena._account_rows(region.offset, region.rowbytes, fr,
-                                        snap=region.snap)
+                                        snap=region.snap, jrnl=region.jrnl)
                 if rew.size:
                     arena._shadow_write(region, rew)
-                if region.snap:
+                if region.snap or region.jrnl:
                     flushed_any = True
                     continue
                 actual = arena.stats.lines - before
@@ -246,7 +247,7 @@ class ShardedWriteSet:
         # line-aligned — every current region — the flushed-lines total
         # is shard-count-invariant too; sub-line rows split across
         # shards legitimately charge a shared line once PER FILE.)
-        if getattr(region, "snap", False):
+        if getattr(region, "snap", False) or getattr(region, "jrnl", False):
             ent = self._pending.get(region.name)
             if ent is None:
                 ent = self._pending[region.name] = [[], 0, 0, []]
@@ -315,7 +316,8 @@ class ShardedWriteSet:
             arrs = arrs + fresh_arrs    # barrier mode: the hint is moot
             rows = np.unique(np.concatenate(arrs)) if len(arrs) > 1 \
                 else arrs[0]
-            if not region.snap:     # snap lines stay off the ledger
+            if not (region.snap or region.jrnl):
+                # snap/jrnl lines stay off the ledger
                 region_rows.append((region, rows, would, marked))
             for sl, local in region._split(rows):
                 work.setdefault(sl.arena_index, []).append((sl, local))
@@ -329,7 +331,7 @@ class ShardedWriteSet:
                 for sl, local in work[s]:
                     self._copy_rows(sl, local)
                     shard._account_rows(sl.offset, sl.rowbytes, local,
-                                        snap=sl.snap)
+                                        snap=sl.snap, jrnl=sl.jrnl)
             actual[s] = shard.stats.lines - before
 
         shards = sorted(work)
@@ -369,7 +371,8 @@ class ShardedWriteSet:
                 else np.empty(0, np.int64)
             # a row marked both ways is conservatively a rewrite
             fr = np.setdiff1d(fr, rew, assume_unique=True)
-            if not region.snap:     # snap lines stay off the ledger
+            if not (region.snap or region.jrnl):
+                # snap/jrnl lines stay off the ledger
                 region_rows.append((would, marked,
                                     int(fr.size + rew.size)))
             for sl, local in region._split(rew):
@@ -390,7 +393,7 @@ class ShardedWriteSet:
                     if fresh:
                         self._copy_rows(sl, local)
                         shard._account_rows(sl.offset, sl.rowbytes, local,
-                                            snap=sl.snap)
+                                            snap=sl.snap, jrnl=sl.jrnl)
                     else:
                         shard._shadow_write(sl, local)
             actual[s] = shard.stats.lines - before

@@ -35,11 +35,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import reconstruct as rec
-from repro.core.arena import open_arena
+from repro.core.arena import journal_enabled, open_arena
 from repro.core.recovery import RecoveryManager, RecoveryReport
 from repro.models.model import Model
 from repro.pstruct.hashmap import H_FRESH as HM_FRESH
 from repro.pstruct.hashmap import Hashmap
+from repro.serve.journal import (OP_ADMIT, OP_COMPLETE, ST_NEVER,
+                                 DuplicateRequestError, RequestJournal,
+                                 args_digest)
 from repro.serve.kvcache import PagedAllocator, PagedConfig
 
 # request-table value row: (slot, prompt_len, total_len, active, 0, 0, 0)
@@ -77,6 +80,13 @@ class EngineConfig:
     # and the axis the --snapshot-slo bench grows 10x to show recovery
     # cost tracking the LIVE suffix, not the pool size.
     n_pages: Optional[int] = None
+    # Persistent request journal (DESIGN.md §11): one sealed descriptor
+    # line per admission/completion rides each epoch's flush, so
+    # recovery classifies every request completed / must-retry /
+    # never-admitted and refuses duplicate admissions.  None defers to
+    # REPRO_JOURNAL, True/False overrides; journal-off layouts are
+    # bit-identical to the pre-journal engine.
+    journal: Optional[bool] = None
 
 
 class ServingEngine:
@@ -91,11 +101,23 @@ class ServingEngine:
         # reads each slot's prompt from its own shard file
         layout["tokens"] = (np.int32, (cfg.max_batch, cfg.s_max),
                             ("seg", 1))
+        # journal ring appended LAST: journal-off layouts keep every
+        # shared region at its pre-journal offset (bit-identical)
+        jr_cap = 4 * cfg.max_requests
+        if journal_enabled(cfg.journal):
+            layout.update(RequestJournal.layout(jr_cap, name="req"))
         self.arena = open_arena(arena_path, layout, n_shards=cfg.n_shards,
                                 commit_mode=cfg.commit_mode)
         self.table = Hashmap(self.arena, cfg.max_requests, cfg.mode,
                              name="req", chain_method=cfg.chain_method,
                              snapshot=cfg.snapshot)
+        # HEAD/TAIL piggyback on the request hashmap's header line
+        # (words 4-5, unused by the hashmap), which every admission /
+        # completion epoch already marks — journal overhead is exactly
+        # the one ring line per epoch (FlushStats.journal_lines)
+        self.journal = RequestJournal(
+            self.arena, jr_cap, name="req", header=self.table.header) \
+            if journal_enabled(cfg.journal) else None
         self.tok_region = self.arena.regions["tokens"]
         self.paging = PagedAllocator(PagedConfig(
             n_pages=max(cfg.n_pages or 0,
@@ -131,9 +153,15 @@ class ServingEngine:
         raise RuntimeError("no free slots")
 
     def add_request(self, rid: int, prompt: np.ndarray) -> int:
+        if self.journal is not None:
+            st = self.journal.state_of(rid)
+            if st != ST_NEVER:
+                raise DuplicateRequestError(
+                    f"request {rid} already journaled as {st}")
         slot = self._free_slot()
         plen = len(prompt)
-        # ESSENTIAL: token log row + request-table entry, one epoch
+        # ESSENTIAL: token log row + request-table entry (+ journal
+        # admission descriptor), one epoch — all or none of it commits
         with self.arena.epoch():
             self.tok_region.vol[slot, :plen] = prompt
             self.tok_region.mark_range(slot, slot + 1)
@@ -141,6 +169,9 @@ class ServingEngine:
             val[0, :4] = [slot, plen, plen, 1]
             self.table.insert_batch(np.array([rid], np.int64), val)
             self.paging.alloc(rid, -(-plen // self.cfg.page_tokens))
+            if self.journal is not None:
+                self.journal.log(OP_ADMIT, rid,
+                                 digest=args_digest(prompt), info=slot)
             self.arena.commit()
         # DERIVABLE: device prefill into the slot
         self._prefill_slot(slot, prompt)
@@ -212,6 +243,29 @@ class ServingEngine:
             self.arena.commit()
         return out
 
+    def finish_request(self, rid: int) -> int:
+        """Retire a completed request: journal the completion and
+        tombstone its table entry in ONE epoch (the COMPLETE descriptor
+        and the table removal share the req.header flush line, so they
+        commit atomically), then release its pages and slot.  Returns
+        the final token count."""
+        rid = int(rid)
+        ok, val = self.table.find_batch(np.array([rid], np.int64))
+        if not ok[0] or int(val[0, V_ACTIVE]) != 1:
+            raise KeyError(f"request {rid} is not active")
+        slot, tlen = int(val[0, V_SLOT]), int(val[0, V_TLEN])
+        with self.arena.epoch():
+            if self.journal is not None:
+                toks = np.array(self.tok_region.vol[slot, :tlen], np.int64)
+                self.journal.log(OP_COMPLETE, rid,
+                                 digest=args_digest(toks), info=tlen)
+            self.table.remove_batch(np.array([rid], np.int64))
+            self.arena.commit()
+        self.paging.free_request(rid)
+        self.slot_rid[slot] = -1
+        self.pos[slot] = 0
+        return tlen
+
     def _decode_slot(self, slot: int, token: int, p: int):
         # extract the slot's cache, run decode at B=1, re-seat it.  A
         # ready slot is never a re-prefill target, so the extracted rows
@@ -260,7 +314,8 @@ class ServingEngine:
         ``last_recovery``."""
         self._recover_concurrency = max(1, int(concurrency))
         req_regions = tuple(n for n in self.arena.regions
-                            if n.startswith("req."))
+                            if n.startswith("req.")
+                            and not n.endswith(".jrnl"))
         mgr = RecoveryManager(self.arena, self.paging.arena)
         mgr.add("req_table", "pstruct.hashmap", self.table,
                 regions=req_regions)
@@ -270,8 +325,15 @@ class ServingEngine:
         mgr.add("lru", "pstruct.dll", self.paging.lru, regions=lru_regions)
         mgr.add("pages", "serve.paged_alloc", self.paging,
                 depends=("lru",), regions=("lru.nodes",))
-        mgr.add("engine", "serve.engine", self,
-                depends=("req_table", "pages"),
+        eng_deps = ("req_table", "pages")
+        if self.journal is not None:
+            # replay the committed journal window, then cross-check the
+            # classification against the recovered table in the engine
+            # stage (detectable exactly-once semantics, DESIGN.md §11)
+            mgr.add("journal", "serve.journal", self.journal,
+                    regions=("req.jrnl", "req.header"))
+            eng_deps += ("journal",)
+        mgr.add("engine", "serve.engine", self, depends=eng_deps,
                 regions=req_regions + ("tokens",))
         report = mgr.recover(concurrency=concurrency, on_stage=on_stage)
         self.last_recovery = report
@@ -306,6 +368,19 @@ def _reconstruct_engine(eng: "ServingEngine") -> dict:
     # valid rids are non-negative; KEY_NULL tombstones are negative too,
     # so one sign check covers both
     live = (keys >= 0) & (vals[:, V_ACTIVE] == 1)
+    if eng.journal is not None:
+        # the journal's must-retry set and the table's live set are two
+        # independent persisted records of the same fact; the shared
+        # req.header flush line makes divergence impossible in any
+        # committed image, so a mismatch here is corruption — fail
+        # loudly instead of double-admitting (DESIGN.md §11)
+        retry = eng.journal.must_retry()
+        table_live = {int(k) for k in keys[live]}
+        if retry != table_live:
+            raise RuntimeError(
+                "journal/table divergence after recovery: journal "
+                f"must-retry={sorted(retry)} vs table live="
+                f"{sorted(table_live)}")
     slots = vals[live, V_SLOT]
     tlens = vals[live, V_TLEN]
     eng.slot_rid[slots] = keys[live]

@@ -607,3 +607,170 @@ def test_ckpt_warmup_thread_failure_surfaces(tmp_path, monkeypatch):
     # the error is consumed; the manager is reusable afterwards
     mgr.restore(spec)
     assert got.step is not None
+
+
+# ------------------- duplicate-admission oracle (DESIGN.md §11)
+#
+# The request journal's exactly-once contract, fuzzed the same way the
+# structures are: crash at EVERY epoch boundary (power-loss and torn),
+# recover, then replay the ENTIRE workload through the journal's
+# duplicate check — completed requests must be refused, interrupted
+# ones must retry, and the final effect-set must equal a twin run that
+# never crashed.  Swept over both commit modes and shard counts
+# regardless of the ambient CI axes.
+
+from repro.serve.feature_store import FeatureConfig, FeatureStore  # noqa: E402
+from repro.serve.journal import (ST_DONE, ST_NEVER,  # noqa: E402
+                                 ST_RETRY, DuplicateRequestError)
+
+FS_GRID = [("barrier", 1), ("barrier", 4), ("shadow", 1), ("shadow", 4)]
+
+
+def _fs_cfg(commit_mode, n_shards):
+    return FeatureConfig(n_keys=64, dim=3, n_samples=512,
+                         commit_mode=commit_mode, n_shards=n_shards,
+                         journal=True)
+
+
+def _fs_script(n_ops, seed=0):
+    rng = np.random.default_rng(seed)
+    ops = []
+    for rid in range(n_ops):
+        m = int(rng.integers(1, 6))
+        keys = rng.choice(64, size=m, replace=False).astype(np.int64)
+        deltas = rng.integers(-9, 10, (m, 3)).astype(np.int64)
+        ops.append((rid, keys, deltas))
+    return ops
+
+
+def _fs_effects(fs):
+    return {"vectors": fs.lookup(np.arange(fs.cfg.n_keys)).copy(),
+            "counts": fs.counts.copy(),
+            "next_sample": fs.next_sample,
+            "classify": dict(fs.journal.classify())}
+
+
+def _fs_assert_effects(fs, want):
+    got = _fs_effects(fs)
+    assert got["classify"] == want["classify"]
+    assert got["next_sample"] == want["next_sample"]
+    np.testing.assert_array_equal(got["counts"], want["counts"])
+    np.testing.assert_array_equal(got["vectors"], want["vectors"])
+
+
+def _fs_twin(commit_mode, n_shards, ops):
+    """Uninterrupted twin run: the expected effect-set, plus the journal
+    overhead bound (<= 1 extra flushed line per epoch)."""
+    fs = FeatureStore(_fs_cfg(commit_mode, n_shards))
+    s0 = fs.arena.stats.snapshot()
+    for op in ops:
+        assert fs.apply(*op)
+    d = fs.arena.stats.delta(s0)
+    assert 0 < d.journal_lines <= d.epochs
+    return _fs_effects(fs)
+
+
+@pytest.mark.parametrize("commit_mode,n_shards", FS_GRID)
+@pytest.mark.parametrize("torn", [False, True])
+def test_journal_exactly_once_every_boundary(commit_mode, n_shards, torn):
+    ops = _fs_script(6, seed=13)
+    want = _fs_twin(commit_mode, n_shards, ops)
+    last = len(ops) if not torn else len(ops) - 1
+    for boundary in range(last + 1):
+        fs = FeatureStore(_fs_cfg(commit_mode, n_shards))
+        for op in ops[:boundary]:
+            assert fs.apply(*op)
+        if torn and boundary < len(ops):
+            # crash inside op `boundary`: data phase durable, commit not
+            assert fs.apply(*ops[boundary], _torn_crash=True) is False
+        else:
+            fs.crash()                       # power loss between epochs
+        rep = fs.recover(concurrency=2)
+        # a report is valid only once a generation has committed; at
+        # boundary 0 the image is legitimately pre-first-commit
+        assert rep.valid == (boundary > 0)
+        # classification: exactly the committed prefix is completed; the
+        # crashed op left no committed trace
+        assert fs.journal.classify() == \
+            {rid: ST_DONE for rid, _, _ in ops[:boundary]}
+        if boundary < len(ops):
+            assert fs.journal.state_of(ops[boundary][0]) == ST_NEVER
+        # the oracle: replay the WHOLE workload; completed requests are
+        # refused, the rest apply exactly once
+        for i, op in enumerate(ops):
+            assert fs.apply(*op) == (i >= boundary), (boundary, i)
+        _fs_assert_effects(fs, want)
+
+
+@pytest.mark.parametrize("commit_mode,n_shards", [("barrier", 1),
+                                                  ("shadow", 4)])
+@pytest.mark.parametrize("crash_after_stage", [0, 1, 2, 3, 4])
+def test_journal_oracle_survives_double_failure(commit_mode, n_shards,
+                                                crash_after_stage):
+    """Crash the journal's own recovery after every stage (reopen, emb,
+    samples, journal, store — possibly while siblings run in pool
+    threads), recover again, and the replay oracle must still land on
+    the twin effect-set with zero duplicate admissions."""
+    ops = _fs_script(5, seed=21)
+    want = _fs_twin(commit_mode, n_shards, ops)
+    fs = FeatureStore(_fs_cfg(commit_mode, n_shards))
+    for op in ops[:3]:
+        assert fs.apply(*op)
+    assert fs.apply(*ops[3], _torn_crash=True) is False
+    seen = []
+
+    def bomb(st):
+        seen.append(st.name)
+        if len(seen) == crash_after_stage + 1:
+            fs.arena.crash()
+
+    try:
+        fs.recover(concurrency=2, on_stage=bomb)
+    except Exception:
+        pass      # garbage volatile state may fail loudly — allowed
+    rep = fs.recover(concurrency=2)
+    assert rep.valid
+    for i, op in enumerate(ops):
+        assert fs.apply(*op) == (i >= 3)
+    _fs_assert_effects(fs, want)
+
+
+def test_engine_journal_refuses_duplicate_admission(tmp_path):
+    """Engine-level exactly-once: after crash+recover the journal
+    classifies a finished request completed and an in-flight one
+    must-retry; re-admitting EITHER raises, the freed slot seats a
+    fresh rid, and decode resumes."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import base, registry
+    from repro.models.model import build
+    from repro.serve.engine import EngineConfig, ServingEngine
+
+    model = build(base.reduced(registry.get("llama3.2-3b")),
+                  compute_dtype=jnp.float32)
+    params = model.init_params(jax.random.PRNGKey(0))
+    eng = ServingEngine(model, params,
+                        EngineConfig(max_batch=2, s_max=16,
+                                     max_requests=16, journal=True),
+                        arena_path=str(tmp_path / "a"))
+    eng.add_request(7, np.array([1, 2, 3, 4], np.int64))
+    eng.add_request(8, np.array([5, 6], np.int64))
+    for _ in range(2):
+        eng.step()
+    assert eng.finish_request(7) == 6          # 4 prompt + 2 decoded
+    with pytest.raises(KeyError):
+        eng.finish_request(7)                  # already finished
+    eng.crash()
+    eng.recover(concurrency=2)
+    rep = eng.last_recovery
+    assert rep.valid
+    assert rep.stage("journal").detail["must_retry"] == 1
+    assert eng.journal.state_of(7) == ST_DONE
+    assert eng.journal.state_of(8) == ST_RETRY
+    for rid in (7, 8):
+        with pytest.raises(DuplicateRequestError):
+            eng.add_request(rid, np.array([9], np.int64))
+    eng.add_request(9, np.array([9, 9], np.int64))  # freed slot reused
+    out = eng.step()
+    assert sorted(out) == [8, 9]
