@@ -39,11 +39,21 @@ def arena_fields(a=None, **over) -> Dict:
     configurations stay self-describing in the JSON artifacts.  Rows
     with no arena behind them (raw chain primitives, the ckpt restore)
     stamp ``commit_mode="none"`` and the working-set bytes instead."""
-    f = {"commit_mode": "none", "n_shards": 1, "arena_bytes": 0}
+    f = {"commit_mode": "none", "n_shards": 1, "arena_bytes": 0,
+         "block_bytes": 0, "cache_blocks": 0, "peak_resident_bytes": 0}
     if a is not None:
         f = {"commit_mode": a.commit_mode,
              "n_shards": int(getattr(a, "n_shards", 1)),
-             "arena_bytes": int(sum(r.nbytes for r in a.regions.values()))}
+             "arena_bytes": int(sum(r.nbytes for r in a.regions.values())),
+             "block_bytes": 0, "cache_blocks": 0, "peak_resident_bytes": 0}
+        # paged arenas (DESIGN.md §12) additionally stamp the block-cache
+        # geometry and the high-water resident footprint, so paged rows
+        # carry their memory budget next to their timings
+        cache = getattr(a, "cache", None)
+        if cache is not None:
+            f.update(block_bytes=int(cache.block_bytes),
+                     cache_blocks=int(cache.cache_blocks),
+                     peak_resident_bytes=int(cache.peak_resident_bytes))
     f.update(over)
     return f
 

@@ -43,6 +43,7 @@ import numpy as np
 from benchmarks.common import arena_fields, make_structure
 from repro.core.arena import open_arena
 from repro.pstruct.bptree import BPTree
+from repro.pstruct.dll import DoublyLinkedList
 
 GROUP = 8  # ops fused per outer epoch in the per_group variant
 SHARD_COUNTS = (1, 2, 4, 8)
@@ -255,6 +256,74 @@ def shadow_crossover(n_init: int, n_ops: int, batch: int = 64,
                              / max(sh["flush_wall_s"], 1e-9), 2)}
 
 
+def paged_parity(n_init: int, n_ops: int, batch: int = 256,
+                 group: int = 16, synth_ns: float = 4000.0,
+                 repeats: int = 3) -> Dict:
+    """The ``--paged-parity`` gate (DESIGN.md §12): the paged backend
+    must not tax the flush path when the working set fits the block
+    cache.  Scattered DLL deletes (the fully block-routed structure),
+    same seed, paged vs unpaged: the write-set drain gathers rows
+    through the block cache instead of slicing the volatile array, and
+    with ZERO evictions (cache-fitting) the line/dedup/fence accounting
+    must be bit-identical and flush lines/s within 5%.  Stall-dominated
+    regime (``synth_ns`` per line) — scaled, like the sharded sweep's
+    stall and the shadow crossover's fence, until the modeled latency
+    clears this host's per-epoch Python overhead; the medium-
+    independent counts stay exact at any scale."""
+    def one(paged: bool) -> Dict:
+        rng = np.random.default_rng(0)
+        cap = n_init + 64
+        layout = DoublyLinkedList.layout(cap, "partly")
+        a = open_arena(None, layout, synth_line_ns=synth_ns, paged=paged,
+                       block_bytes=4096,
+                       cache_blocks=(cap * 64) // 4096 + 16)
+        d = DoublyLinkedList(a, cap, "partly")
+        vals = rng.integers(0, 1 << 40, (n_init, 7)).astype(np.int64)
+        for i in range(0, n_init, 4096):
+            d.append_batch(vals[i:i + 4096])
+        a.commit()
+        ids = rng.permutation(n_init)[:n_ops].astype(np.int64)
+        base = a.stats.snapshot()
+        flush_wall = 0.0
+        for g in range(0, n_ops, batch * group):
+            a._epoch_depth += 1
+            for i in range(g, min(g + batch * group, n_ops), batch):
+                d.delete_batch(ids[i:i + batch])
+            a._epoch_depth -= 1
+            t0 = time.perf_counter()
+            a.writeset.flush()
+            a.commit()
+            flush_wall += time.perf_counter() - t0
+        st = a.stats.delta(base)
+        cache = getattr(a, "cache", None)
+        row = {**arena_fields(a), "paged": paged,
+               "flush_wall_s": round(flush_wall, 6),
+               "lines": st.lines, "saved_lines": st.saved_lines,
+               "snapshot_lines": st.snapshot_lines,
+               "dedup_rows": st.dedup_rows, "epochs": st.epochs,
+               "fences": st.fences,
+               "evictions": int(cache.evictions) if cache else 0,
+               "spills": int(cache.spills) if cache else 0,
+               "lines_per_s": int(st.lines / max(flush_wall, 1e-9))}
+        a.close()
+        return row
+
+    best: Dict[bool, Dict] = {}
+    for _ in range(repeats):
+        for paged in (False, True):
+            r = one(paged)
+            if (paged not in best
+                    or r["flush_wall_s"] < best[paged]["flush_wall_s"]):
+                best[paged] = r
+    up, pg = best[False], best[True]
+    return {"workload": "dll scattered deletes, stall-dominated, "
+                        "working set fits the block cache",
+            "synth_line_ns": synth_ns,
+            "rows": [up, pg],
+            "lines_per_s_ratio": round(
+                pg["lines_per_s"] / max(up["lines_per_s"], 1), 3)}
+
+
 def run(n_init: int = 20000, n_ops: int = 20000,
         batch: int = 64) -> List[Dict]:
     rows = []
@@ -292,8 +361,46 @@ def main() -> int:
                          "comparison at n_shards=4 in the fence-"
                          "dominated regime; records in --quick mode, "
                          "asserts >= 1.3x otherwise — the CI gate")
+    ap.add_argument("--paged-parity", action="store_true",
+                    help="run ONLY the paged-vs-unpaged flush parity "
+                         "gate: with the working set inside the block "
+                         "cache, line accounting must be bit-identical "
+                         "and paged flush lines/s within 5% "
+                         "(DESIGN.md §12); merges a paged_parity "
+                         "section into --out")
     ap.add_argument("--out", default="BENCH_flush.json")
     args = ap.parse_args()
+    if args.paged_parity:
+        pp = paged_parity(*( (4000, 4096) if args.quick
+                             else (12000, 8192) ))
+        for r in pp["rows"]:
+            print(f"  paged={'on' if r['paged'] else 'off':>3}: wall "
+                  f"{r['flush_wall_s']}s, {r['lines']} lines, "
+                  f"{r['lines_per_s']} lines/s, "
+                  f"evictions={r['evictions']} spills={r['spills']}")
+        print(f"paged/unpaged flush throughput: "
+              f"{pp['lines_per_s_ratio']}x (gate >= 0.95)")
+        try:
+            with open(args.out) as f:
+                data = json.load(f)
+        except (OSError, ValueError):
+            data = {}
+        data["paged_parity"] = pp
+        with open(args.out, "w") as f:
+            json.dump(data, f, indent=1)
+        print(f"-> {args.out}")
+        up, pg = pp["rows"]
+        # the cache-fitting premise: no eviction, no spill on the paged
+        # side, so every drain gather hits resident blocks
+        assert pg["evictions"] == 0 and pg["spills"] == 0, pg
+        # medium-independent accounting must not see the backend at all
+        for k in ("lines", "saved_lines", "snapshot_lines", "dedup_rows",
+                  "epochs", "fences"):
+            assert up[k] == pg[k], (k, up, pg)
+        # ... and the stall-dominated flush wall must stay within 5%
+        if not args.quick:
+            assert pp["lines_per_s_ratio"] >= 0.95, pp
+        return 0
     if args.shadow_crossover:
         xr = shadow_crossover(4000, 8192, batch=64, group=4)
         for r in xr["rows"]:

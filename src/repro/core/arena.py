@@ -95,7 +95,53 @@ class FlushStats:
                             for f in dataclasses.fields(self)))
 
 
-class Region:
+class _RowAccess:
+    """Row accessors shared by Region and ShardedRegion.
+
+    Structures read/write volatile rows through these instead of direct
+    ``.vol`` fancy indexing; here they are thin views over the
+    full-shape volatile array (zero behavior change), while the paged
+    variants (core/paging.py, DESIGN.md §12) override them to route
+    through the per-arena block cache without ever materializing the
+    full array.  ``col`` may be an int or a slice over the trailing
+    dimension."""
+
+    is_paged = False
+
+    def read_rows(self, rows: np.ndarray) -> np.ndarray:
+        return self.vol[np.asarray(rows, np.int64)]
+
+    def read_at(self, rows: np.ndarray, col) -> np.ndarray:
+        return self.vol[np.asarray(rows, np.int64), col]
+
+    def read_one(self, row: int, col: int) -> int:
+        return int(self.vol[row, col])
+
+    def read_col(self, col) -> np.ndarray:
+        return self.vol[:, col]
+
+    def write_rows(self, rows: np.ndarray, vals) -> None:
+        self.vol[np.asarray(rows, np.int64)] = vals
+
+    def write_at(self, rows: np.ndarray, col, vals) -> None:
+        self.vol[np.asarray(rows, np.int64), col] = vals
+
+    # -- paging hooks (no-ops on resident regions) ------------------------
+    def _note_flushed(self, rows: np.ndarray) -> None:
+        """Rows just copied volatile->persistent through the write-set:
+        a paged region clears their dirty bits (unpinning clean blocks
+        for eviction); resident regions need no bookkeeping."""
+
+    def _note_persisted(self, rows: np.ndarray) -> None:
+        """Rows just written home by a DIRECT (epoch-less) persist call
+        — the paged override additionally keeps shadow-masked rows
+        dirty, since a refault would overlay the stale mirror."""
+
+    def _note_persisted_range(self, lo: int, hi: int) -> None:
+        pass
+
+
+class Region(_RowAccess):
     """A named, row-structured persistent region."""
 
     def __init__(self, arena: "Arena", name: str, dtype, shape: Tuple[int, ...],
@@ -123,7 +169,15 @@ class Region:
         self.rowbytes = int(self.dtype.itemsize * np.prod(shape[1:], dtype=np.int64)) \
             if len(shape) > 1 else self.dtype.itemsize
         self.nbytes = self.rowbytes * shape[0]
-        # Volatile working copy.
+        self._init_vol()
+
+    def _init_vol(self) -> None:
+        # Volatile working copy.  PagedRegion overrides this with a
+        # demand-faulted block pool (DESIGN.md §12).
+        self.vol = np.zeros(self.shape, self.dtype)
+
+    def _crash_reset(self) -> None:
+        """Discard volatile state on a simulated power loss."""
         self.vol = np.zeros(self.shape, self.dtype)
 
     # -- persistence ------------------------------------------------------
@@ -158,6 +212,7 @@ class Region:
         pv[rows] = self._gather(rows)
         self.arena._account_rows(self.offset, self.rowbytes, rows,
                                  snap=self.snap, jrnl=self.jrnl)
+        self._note_persisted(rows)
 
     def mark_rows(self, rows: np.ndarray, fresh: bool = False) -> None:
         """Add rows to the arena's write set (flushed once, deduplicated,
@@ -186,6 +241,7 @@ class Region:
         self.arena._account_range(self.offset + lo * self.rowbytes,
                                   (hi - lo) * self.rowbytes,
                                   snap=self.snap, jrnl=self.jrnl)
+        self._note_persisted_range(lo, hi)
 
     def persist_all(self) -> None:
         self.persist_range(0, self.shape[0])
@@ -204,11 +260,23 @@ class Arena:
 
     def __init__(self, path: Optional[str], synth_line_ns: float = 0.0,
                  pack_flush_rows: int = 0, commit_mode: str = "barrier",
-                 synth_fence_ns: float = 0.0):
+                 synth_fence_ns: float = 0.0, paged: Optional[bool] = None,
+                 block_bytes: int = 4096, cache_blocks: int = 1024):
         assert commit_mode in ("barrier", "shadow")
         self.path = path
         self.regions: Dict[str, Region] = {}
         self.stats = FlushStats()
+        # Paged-region backend (DESIGN.md §12): eligible data regions
+        # fault fixed-size blocks through a per-arena LRU cache instead
+        # of materializing a full-shape volatile array.  Strictly
+        # volatile-side — persistent layouts are bit-identical either way.
+        self.paged = paged_enabled(paged)
+        self.block_bytes = int(block_bytes)
+        self.cache_blocks = int(cache_blocks)
+        self.cache = None
+        if self.paged:
+            from repro.core.paging import BlockCache
+            self.cache = BlockCache(self.block_bytes, self.cache_blocks)
         self.synth_line_ns = synth_line_ns
         self.commit_mode = commit_mode
         self.synth_fence_ns = synth_fence_ns
@@ -278,8 +346,13 @@ class Arena:
         # Row-align every region to LINE so a row flush never straddles an
         # unrelated region (paper: __attribute__((aligned(64)))).
         self._cursor = _align(self._cursor, LINE)
-        r = _cls(self, name, dtype, shape, self._cursor, meta=meta,
-                 **_slice_kw)
+        cls = _cls
+        if cls is Region and self.cache is not None and _paged_eligible(
+                name, meta, dtype, shape, self.block_bytes):
+            from repro.core.paging import PagedRegion
+            cls = PagedRegion
+        r = cls(self, name, dtype, shape, self._cursor, meta=meta,
+                **_slice_kw)
         self._cursor += _align(r.nbytes, LINE)
         self.regions[name] = r
         self._region_ids[name] = len(self._region_ids)
@@ -443,6 +516,10 @@ class Arena:
                                 int(new.size) * 16, snap=region.snap,
                                 jrnl=region.jrnl)
             self._shadow_counts[b] = cnt + int(new.size)
+        # The rows' volatile values are now captured persistently in the
+        # target-bank mirror, which a paged refault overlays — so their
+        # dirty bits may clear (clean blocks become evictable).
+        region._note_flushed(rows)
 
     def _shadow_collapse(self, limit: Optional[int] = None) -> bool:
         """Fold the committed bank's shadow rows into their home slots —
@@ -585,7 +662,7 @@ class Arena:
         self.writeset.discard()
         self._shadow_discard()
         for r in self.regions.values():
-            r.vol = np.zeros(r.shape, r.dtype)
+            r._crash_reset()
 
     def reopen(self) -> None:
         """Reload every region's volatile copy from persistent memory,
@@ -753,6 +830,33 @@ def journal_enabled(flag: Optional[bool] = None) -> bool:
     return os.environ.get("REPRO_JOURNAL", "1") != "0"
 
 
+def paged_enabled(flag: Optional[bool] = None) -> bool:
+    """Resolve an arena's ``paged=`` ctor arg: an explicit flag wins;
+    ``None`` defers to the ``REPRO_PAGED`` env axis (default OFF — the
+    resident volatile array is the baseline).  Paging is strictly
+    volatile-side, so persistent layouts are bit-identical either way
+    (DESIGN.md §12)."""
+    if flag is not None:
+        return bool(flag)
+    return os.environ.get("REPRO_PAGED", "0") != "0"
+
+
+def _paged_eligible(name: str, meta: Optional[bool], dtype, shape,
+                    block_bytes: int) -> bool:
+    """Data regions bigger than one block page; headers, order
+    snapshots, and journal rings stay resident — they are tiny, hot on
+    every epoch, and recovery reads them in full anyway.  Computed from
+    the layout spec BEFORE construction so an ineligible huge region is
+    never allocated twice."""
+    snap = ".snap" in name
+    jrnl = ".jrnl" in name
+    m = (name.endswith("header") or snap) if meta is None else meta
+    rowbytes = int(np.dtype(dtype).itemsize *
+                   np.prod(shape[1:], dtype=np.int64)) \
+        if len(shape) > 1 else np.dtype(dtype).itemsize
+    return not (m or snap or jrnl) and rowbytes * shape[0] > block_bytes
+
+
 def snap_checksum(rec: np.ndarray) -> int:
     """Mix-then-xor checksum over the first 7 words of a snapshot
     record.  A torn 64 B record line (the only partial-write unit the
@@ -866,13 +970,25 @@ class _ShardSlice(Region):
         self.arena_index = arena_index  # which shard holds this slice
 
     def _gather(self, rows: np.ndarray) -> np.ndarray:
-        return self._parent.vol[self._gidx[rows]]
+        return self._parent._vol_rows(self._gidx[rows])
 
     def _gather_range(self, lo: int, hi: int) -> np.ndarray:
-        return self._parent.vol[self._gidx[lo:hi]]
+        return self._parent._vol_rows(self._gidx[lo:hi])
 
     def _pack_source(self, rows: np.ndarray):
-        return self._parent.vol, self._gidx[rows]
+        return self._parent._pack_source_global(self._gidx[rows])
+
+    def _note_flushed(self, rows: np.ndarray) -> None:
+        self._parent._note_flushed_global(self._gidx[rows])
+
+    def _note_persisted(self, rows: np.ndarray) -> None:
+        self._parent._note_persisted_global(self._gidx[rows])
+
+    def _note_persisted_range(self, lo: int, hi: int) -> None:
+        self._parent._note_persisted_global(self._gidx[lo:hi])
+
+    def _crash_reset(self) -> None:
+        pass                            # no volatile state of its own
 
     def load(self) -> None:
         self._parent.vol[self._gidx] = self._pview()
@@ -880,7 +996,7 @@ class _ShardSlice(Region):
                                    gidx=self._gidx)
 
 
-class ShardedRegion:
+class ShardedRegion(_RowAccess):
     """Facade with the exact Region API structures use (``vol`` /
     ``mark_rows`` / ``mark_range`` / ``persist_*`` / ``load``), backed
     by per-shard slices.  Marks and flushes partition by the router;
@@ -902,7 +1018,7 @@ class ShardedRegion:
                             np.prod(shape[1:], dtype=np.int64)) \
             if len(shape) > 1 else self.dtype.itemsize
         self.nbytes = self.rowbytes * shape[0]
-        self.vol = np.zeros(self.shape, self.dtype)
+        self._init_vol()
         n = self.shape[0]
         self.router = router = normalize_router(router, n, arena.n_shards,
                                                 rr_hint)
@@ -927,6 +1043,28 @@ class ShardedRegion:
                               meta=self.meta, _cls=_ShardSlice,
                               parent=self, gidx=gidx, arena_index=s)
             self.slices.append(sl)
+
+    def _init_vol(self) -> None:
+        self.vol = np.zeros(self.shape, self.dtype)
+
+    def _crash_reset(self) -> None:
+        # the volatile buffer is a LONG-LIVED arena: zero in place so
+        # the post-crash reload writes warm pages
+        self.vol.fill(0)
+
+    # -- slice plumbing: slices hold no volatile state, so their gathers
+    # and paging notes route through the parent with GLOBAL row ids ------
+    def _vol_rows(self, grows: np.ndarray) -> np.ndarray:
+        return self.vol[grows]
+
+    def _pack_source_global(self, grows: np.ndarray):
+        return self.vol, grows
+
+    def _note_flushed_global(self, grows: np.ndarray) -> None:
+        pass
+
+    def _note_persisted_global(self, grows: np.ndarray) -> None:
+        pass
 
     # -- shard partitioning ------------------------------------------------
     def _split(self, rows: np.ndarray):
@@ -1022,15 +1160,27 @@ class ShardedArena:
 
     def __init__(self, path: Optional[str], n_shards: int = 2,
                  synth_line_ns: float = 0.0, pack_flush_rows: int = 0,
-                 commit_mode: str = "barrier", synth_fence_ns: float = 0.0):
+                 commit_mode: str = "barrier", synth_fence_ns: float = 0.0,
+                 paged: Optional[bool] = None, block_bytes: int = 4096,
+                 cache_blocks: int = 1024):
         assert n_shards >= 1
         assert commit_mode in ("barrier", "shadow")
         self.path = path
         self.n_shards = int(n_shards)
+        # shard sub-arenas are pure persistence backends — the ONE block
+        # cache (like the one volatile image it replaces) lives at the
+        # sharded level, so shards are always opened unpaged
         self.shards = [Arena(f"{path}.s{k}" if path else None,
                              synth_line_ns, pack_flush_rows,
-                             commit_mode=commit_mode)
+                             commit_mode=commit_mode, paged=False)
                        for k in range(self.n_shards)]
+        self.paged = paged_enabled(paged)
+        self.block_bytes = int(block_bytes)
+        self.cache_blocks = int(cache_blocks)
+        self.cache = None
+        if self.paged:
+            from repro.core.paging import BlockCache
+            self.cache = BlockCache(self.block_bytes, self.cache_blocks)
         for sh in self.shards:
             sh.synth_sleep = True
         self.synth_line_ns = synth_line_ns
@@ -1082,8 +1232,13 @@ class ShardedArena:
                meta: Optional[bool] = None, router=None) -> ShardedRegion:
         assert not self._layout_final, "layout already finalized"
         assert name not in self.regions
-        r = ShardedRegion(self, name, dtype, shape, meta=meta,
-                          router=router, rr_hint=self._rr)
+        cls = ShardedRegion
+        if self.cache is not None and _paged_eligible(
+                name, meta, dtype, shape, self.block_bytes):
+            from repro.core.paging import PagedShardedRegion
+            cls = PagedShardedRegion
+        r = cls(self, name, dtype, shape, meta=meta,
+                router=router, rr_hint=self._rr)
         self._rr += 1
         self.regions[name] = r
         return r
@@ -1224,7 +1379,7 @@ class ShardedArena:
         for sh in self.shards:
             sh._shadow_discard()
         for r in self.regions.values():
-            r.vol.fill(0)
+            r._crash_reset()
 
     def reopen(self, concurrency: int = 1,
                exclude: Tuple[str, ...] = ()) -> None:
@@ -1242,6 +1397,12 @@ class ShardedArena:
         for sh in self.shards:
             sh._shadow_parse(authority_gen=man_gen)
         regions = [r for n, r in self.regions.items() if n not in exclude]
+        # paged regions reload lazily: one cheap block-pool reset, and
+        # the post-crash working set faults in on demand
+        for r in regions:
+            if r.is_paged:
+                r.load()
+        regions = [r for r in regions if not r.is_paged]
 
         def load_shard(s: int) -> None:
             # one aggregated media stall per shard, not one per region

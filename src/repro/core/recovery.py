@@ -654,7 +654,16 @@ class RecoveryManager:
     """
 
     def __init__(self, *arenas: Any):
-        self.arenas = [a for a in arenas if a is not None]
+        # dedupe by identity: callers pass each structure's arena and
+        # several structures often share one (e.g. the engine's table
+        # and allocator) — a duplicate would reopen it twice and count
+        # its block-fault deltas twice
+        seen: set = set()
+        self.arenas = []
+        for a in arenas:
+            if a is not None and id(a) not in seen:
+                seen.add(id(a))
+                self.arenas.append(a)
         self._items: Dict[str, Recoverable] = {}
         self._listeners: List[Callable[[StageReport], None]] = []
 
@@ -803,8 +812,21 @@ class RecoveryManager:
             if not items[n].depends and not load_deps[n]:
                 ready_at[n] = reopen_secs
 
+        # paged arenas (DESIGN.md §12): per-stage block-fault deltas make
+        # demand-paged recovery visible — load: stages of paged regions
+        # are free resets, and the faults attribute to whichever
+        # reconstructor actually touched the blocks.  Under concurrent
+        # recovery simultaneous stages share the counters, so per-stage
+        # attribution is approximate (the TOTAL across stages is exact).
+        caches = [a.cache for a in self.arenas
+                  if getattr(a, "cache", None) is not None]
+
+        def _cache_faults() -> int:
+            return sum(c.faults for c in caches)
+
         def run_stage(name: str) -> StageReport:
             t0 = time.perf_counter()
+            faults0 = _cache_faults() if caches else 0
             if name.startswith("load:"):
                 regions = split[name[5:]]
                 for region in regions:
@@ -817,6 +839,8 @@ class RecoveryManager:
                 out, secs = reconstruct.run(it.reconstructor, it.target)
                 detail = dict(out) if isinstance(out, dict) else {}
                 detail.setdefault("reconstructor", it.reconstructor)
+            if caches:
+                detail["block_faults"] = _cache_faults() - faults0
             t1 = time.perf_counter()
             st = StageReport(name, secs, detail,
                              t_start=t0 - t_all, t_end=t1 - t_all,
@@ -871,9 +895,20 @@ class RecoveryManager:
         # already hold the scheduler lock
         done_cv = threading.Condition(threading.RLock())
         outstanding = [0]
+        # an inline callback can also fire MID-submission-loop: it runs
+        # finished() for the stage just submitted, which may drop a
+        # LATER loop stage's counter to zero and submit it before the
+        # loop reaches it — the loop's own remaining==0 check would then
+        # submit it AGAIN, and the duplicate completion double-decrements
+        # its dependents (a stage could start before a sibling dep
+        # finished).  `submitted` makes submission idempotent.
+        submitted: set = set()
 
         with ThreadPoolExecutor(max_workers=concurrency) as ex:
             def submit(name: str) -> None:
+                if name in submitted:
+                    return
+                submitted.add(name)
                 outstanding[0] += 1
                 fut = ex.submit(run_stage, name)
                 fut.add_done_callback(

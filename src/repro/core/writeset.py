@@ -214,6 +214,9 @@ class WriteSet:
             pv[rows] = _pack_gather(vol, vrows)
         else:
             pv[rows] = region._gather(rows)
+        # the epoch drain IS the dirty-block write-back path: the rows
+        # are home now, so a paged region may unpin their blocks
+        region._note_flushed(rows)
 
 
 class ShardedWriteSet:
@@ -418,6 +421,8 @@ class ShardedWriteSet:
             pv[rows] = _pack_gather(vol, vrows)
         else:
             pv[rows] = sl._gather(rows)
+        # write-back point for paged parents (slice forwards globally)
+        sl._note_flushed(rows)
 
 
 def _pack_gather(vol: np.ndarray, rows: np.ndarray) -> np.ndarray:

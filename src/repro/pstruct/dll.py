@@ -114,11 +114,28 @@ class DoublyLinkedList:
     # ------------- views over the node rows -------------
     @property
     def data(self) -> np.ndarray:
+        # full-array view — on a paged arena this SPILLS the region;
+        # batch consumers should use data_rows()
         return self.nodes.vol[:, :DATA_WORDS]
 
     @property
     def next(self) -> np.ndarray:
         return self.nodes.vol[:, DATA_WORDS]
+
+    def data_rows(self, ids: np.ndarray) -> np.ndarray:
+        """DATA words of the given node ids — block-routed on a paged
+        arena (the ``.data`` property would materialize the region)."""
+        return np.asarray(self.nodes.read_at(np.asarray(ids, np.int64),
+                                             slice(0, DATA_WORDS)))
+
+    def _next_col(self) -> np.ndarray:
+        """NEXT column for a full chain walk: a paged nodes region reads
+        the column through the block cache (residency stays bounded by
+        eviction); resident regions return the live view."""
+        n = self.nodes
+        if getattr(n, "paged_active", False):
+            return np.asarray(n.read_col(DATA_WORDS))
+        return n.vol[:, DATA_WORDS]
 
     @property
     def head(self) -> int:
@@ -159,14 +176,14 @@ class DoublyLinkedList:
         fresh0 = int(self.header.vol[0, H_FRESH])
         ids = self._alloc(m)
         hv = self.header.vol[0]
-        self.nodes.vol[ids, :DATA_WORDS] = values
+        self.nodes.write_at(ids, slice(0, DATA_WORDS), values)
         # chain: old_tail -> ids[0] -> ids[1] ... -> NULL
-        self.nodes.vol[ids[:-1], DATA_WORDS] = ids[1:]
-        self.nodes.vol[ids[-1], DATA_WORDS] = NULL
+        self.nodes.write_at(ids[:-1], DATA_WORDS, ids[1:])
+        self.nodes.write_at(ids[-1:], DATA_WORDS, NULL)
         self.prev[ids[1:]] = ids[:-1]
         old_tail = int(hv[H_TAIL]) if hv[H_COUNT] > 0 else NULL
         if old_tail != NULL:
-            self.nodes.vol[old_tail, DATA_WORDS] = ids[0]
+            self.nodes.write_at(np.asarray([old_tail]), DATA_WORDS, ids[0])
             self.prev[ids[0]] = old_tail
         else:
             hv[H_HEAD] = ids[0]
@@ -175,8 +192,8 @@ class DoublyLinkedList:
         hv[H_COUNT] += m
         hv[H_FLAG] = 1
         if self.mode == "full":
-            self.nodes.vol[ids[1:], DATA_WORDS + 1] = ids[:-1]
-            self.nodes.vol[ids[0], DATA_WORDS + 1] = old_tail
+            self.nodes.write_at(ids[1:], DATA_WORDS + 1, ids[:-1])
+            self.nodes.write_at(ids[:1], DATA_WORDS + 1, old_tail)
         # ring
         n = len(ids)
         if self._r1 + n > self._ring.size:
@@ -213,7 +230,7 @@ class DoublyLinkedList:
         if m == 0:
             return np.empty(0, np.int64)
         ids = self._ring_pop(m)
-        new_head = int(self.nodes.vol[ids[-1], DATA_WORDS])
+        new_head = self.nodes.read_one(int(ids[-1]), DATA_WORDS)
         hv[H_HEAD] = new_head
         hv[H_COUNT] -= m
         if new_head == NULL:
@@ -226,7 +243,8 @@ class DoublyLinkedList:
         if self.mode == "full":
             # fully persistent must clear new_head's prev line
             if new_head != NULL:
-                self.nodes.vol[new_head, DATA_WORDS + 1] = NULL
+                self.nodes.write_at(np.asarray([new_head]),
+                                    DATA_WORDS + 1, NULL)
                 self.nodes.mark_rows(np.array([new_head]))
         self.header.mark_rows(np.array([0]))
         return ids
@@ -249,27 +267,34 @@ class DoublyLinkedList:
             batch = arr[ready]
             if batch.size == 0:  # adjacent chain; peel one end
                 batch = arr[:1]
-            nxt = self.nodes.vol[batch, DATA_WORDS]
+            nxt = np.asarray(self.nodes.read_at(batch, DATA_WORDS))
             prv = self.prev[batch]
-            dirty = []
-            for b, nx, pv in zip(batch.tolist(), nxt.tolist(), prv.tolist()):
-                if pv != NULL:
-                    self.nodes.vol[pv, DATA_WORDS] = nx
-                    dirty.append(pv)
-                else:
-                    hv[H_HEAD] = nx
-                if nx != NULL:
-                    self.prev[nx] = pv
-                    if self.mode == "full":
-                        self.nodes.vol[nx, DATA_WORDS + 1] = pv
-                        dirty.append(nx)
-                else:
-                    hv[H_TAIL] = pv
+            # batched column writes: within a round each node has a
+            # DISTINCT predecessor and successor (a list node has one of
+            # each, and nodes whose predecessor is also being deleted
+            # wait for a later round), so the scatters are conflict-free
+            link = prv != NULL
+            if link.any():
+                self.nodes.write_at(prv[link], DATA_WORDS, nxt[link])
+            for i in np.nonzero(~link)[0]:
+                hv[H_HEAD] = nxt[i]
+            has_nx = nxt != NULL
+            if has_nx.any():
+                self.prev[nxt[has_nx]] = prv[has_nx]
+                if self.mode == "full":
+                    self.nodes.write_at(nxt[has_nx], DATA_WORDS + 1,
+                                        prv[has_nx])
+            for i in np.nonzero(~has_nx)[0]:
+                hv[H_TAIL] = prv[i]
+            dirty = [prv[link]]
+            if self.mode == "full":
+                dirty.append(nxt[has_nx])
+            dirty = np.concatenate(dirty)
             hv[H_COUNT] -= batch.size
             self._free.extend(batch.tolist())
             pending.difference_update(batch.tolist())
-            if dirty:
-                self.nodes.mark_rows(np.asarray(dirty, np.int64))
+            if dirty.size:
+                self.nodes.mark_rows(dirty)
         self.header.mark_rows(np.array([0]))
         self._ring_invalidate(ids)
 
@@ -305,7 +330,7 @@ class DoublyLinkedList:
         """Materialize list order from NEXT (the shared chain_order
         primitive — doubling or contraction per ``chain_method``, never
         a scalar walk)."""
-        return chain_order(self.next, self.head, self.count,
+        return chain_order(self._next_col(), self.head, self.count,
                            method=self.chain_method)
 
     def order(self) -> np.ndarray:
@@ -412,11 +437,19 @@ def _snap_candidate(d, count: int) -> Optional[ChainSnapshot]:
     base = window[window != NULL]
     if base.size == 0 or ((base < 0) | (base >= d.capacity)).any():
         return None
-    nxt = d.next
+    if getattr(d.nodes, "paged_active", False):
+        # bounded scalar suffix walk: fault only the blocks it steps on
+        def read_next(cur: int) -> int:
+            return d.nodes.read_one(cur, DATA_WORDS)
+    else:
+        nxt = d.next
+
+        def read_next(cur: int) -> int:
+            return int(nxt[cur])
     suffix = []
     cur = int(base[-1])
     while len(suffix) < count:
-        nx = int(nxt[cur])
+        nx = read_next(cur)
         if nx < 0 or nx >= d.capacity:
             break
         suffix.append(nx)
@@ -426,6 +459,24 @@ def _snap_candidate(d, count: int) -> Optional[ChainSnapshot]:
     if cand.size < count:
         return None
     return ChainSnapshot(cand[cand.size - count:], replayed=len(suffix))
+
+
+def _gather_verify(nodes, head: int, count: int, cand: np.ndarray,
+                   n: int) -> bool:
+    """Exact mirror of recovery._snapshot_verify, but gathering NEXT of
+    only the candidate rows through the block cache — the verify that
+    makes snapshot adoption safe costs O(working set) faults instead of
+    a full-column read on a paged arena."""
+    if count is None or cand.size != count:
+        return False
+    if int(cand[0]) != int(head):
+        return False
+    if ((cand < 0) | (cand >= n)).any():
+        return False
+    if count > 1 and not np.array_equal(
+            np.asarray(nodes.read_at(cand[:-1], DATA_WORDS)), cand[1:]):
+        return False
+    return True
 
 
 @rec.register("pstruct.dll")
@@ -457,7 +508,17 @@ def _reconstruct_dll(d: "DoublyLinkedList") -> dict:
     # (data flushed, header not) stay unreachable.
     method = getattr(d, "chain_method", "auto")
     snap = _snap_candidate(d, count) if snap_on else None
-    order = chain_order(d.next, head, count, method=method, snapshot=snap)
+    if getattr(d.nodes, "paged_active", False) and snap is not None \
+            and _gather_verify(d.nodes, head, count, snap.candidate,
+                               d.capacity):
+        # paged fast path: adopt the verified snapshot WITHOUT touching
+        # the full NEXT column — recovery faults only the candidate
+        # rows' blocks, so its cost tracks the working set
+        snap.outcome = "snapshot"
+        order = snap.candidate.astype(np.int64, copy=True)
+    else:
+        order = chain_order(d._next_col(), head, count, method=method,
+                            snapshot=snap)
     d.prev[order[1:]] = order[:-1]
     hv[H_TAIL] = order[-1]
     live = np.zeros(d.capacity, bool)
@@ -471,8 +532,11 @@ def _reconstruct_dll(d: "DoublyLinkedList") -> dict:
     d._ring[:count] = order
     d._r0, d._r1 = 0, count
     if d.mode == "full":
-        d.nodes.vol[order[1:], DATA_WORDS + 1] = order[:-1]
-        d.nodes.vol[order[0], DATA_WORDS + 1] = NULL
+        # pure-reconstructor PREV rebuild stays UNMARKED (derivable);
+        # on a paged arena these rows pin their blocks dirty until a
+        # later epoch flushes them — the documented full-mode cost
+        d.nodes.write_at(order[1:], DATA_WORDS + 1, order[:-1])
+        d.nodes.write_at(order[:1], DATA_WORDS + 1, NULL)
     detail = {"mode": d.mode, "count": count,
               "chain": chain_method(d.capacity, count, method)}
     if snap_on:

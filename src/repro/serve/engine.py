@@ -87,6 +87,13 @@ class EngineConfig:
     # REPRO_JOURNAL, True/False overrides; journal-off layouts are
     # bit-identical to the pre-journal engine.
     journal: Optional[bool] = None
+    # Paged regions (DESIGN.md §12): None defers to the REPRO_PAGED env
+    # gate (default off).  With paging on, large data regions (the
+    # token-log slab, the LRU node slab) keep only a block-cache-bounded
+    # volatile working set, and recovery faults blocks on demand.
+    paged: Optional[bool] = None
+    block_bytes: int = 4096
+    cache_blocks: int = 1024
 
 
 class ServingEngine:
@@ -107,7 +114,9 @@ class ServingEngine:
         if journal_enabled(cfg.journal):
             layout.update(RequestJournal.layout(jr_cap, name="req"))
         self.arena = open_arena(arena_path, layout, n_shards=cfg.n_shards,
-                                commit_mode=cfg.commit_mode)
+                                commit_mode=cfg.commit_mode,
+                                paged=cfg.paged, block_bytes=cfg.block_bytes,
+                                cache_blocks=cfg.cache_blocks)
         self.table = Hashmap(self.arena, cfg.max_requests, cfg.mode,
                              name="req", chain_method=cfg.chain_method,
                              snapshot=cfg.snapshot)
@@ -124,7 +133,9 @@ class ServingEngine:
                         cfg.max_batch * (cfg.s_max // cfg.page_tokens)),
             page_tokens=cfg.page_tokens, mode=cfg.mode,
             n_shards=cfg.n_shards, commit_mode=cfg.commit_mode,
-            chain_method=cfg.chain_method, snapshot=cfg.snapshot))
+            chain_method=cfg.chain_method, snapshot=cfg.snapshot,
+            paged=cfg.paged, block_bytes=cfg.block_bytes,
+            cache_blocks=cfg.cache_blocks))
         # device state (DERIVABLE)
         self.cache = model.init_cache(cfg.max_batch, cfg.s_max)
         self.pos = np.zeros(cfg.max_batch, np.int64)       # per-slot length
@@ -163,7 +174,9 @@ class ServingEngine:
         # ESSENTIAL: token log row + request-table entry (+ journal
         # admission descriptor), one epoch — all or none of it commits
         with self.arena.epoch():
-            self.tok_region.vol[slot, :plen] = prompt
+            self.tok_region.write_at(np.asarray([slot], np.int64),
+                                     slice(0, plen),
+                                     np.asarray(prompt)[None])
             self.tok_region.mark_range(slot, slot + 1)
             val = np.zeros((1, 7), np.int64)
             val[0, :4] = [slot, plen, plen, 1]
@@ -227,11 +240,12 @@ class ServingEngine:
                 p = int(self.pos[slot])
                 if p >= self.cfg.s_max:
                     continue
-                last_tok = int(self.tok_region.vol[slot, p - 1])
+                last_tok = int(self.tok_region.read_one(slot, p - 1))
                 logits = self._decode_slot(slot, last_tok, p)
                 tok = int(np.asarray(jnp.argmax(logits)))
                 # ESSENTIAL: append the generated token + bump lengths
-                self.tok_region.vol[slot, p] = tok
+                self.tok_region.write_at(np.asarray([slot], np.int64),
+                                         p, tok)
                 self.tok_region.mark_range(slot, slot + 1)
                 val = np.zeros((1, 7), np.int64)
                 val[0, :4] = [slot, 0, 0, 1]
@@ -256,7 +270,9 @@ class ServingEngine:
         slot, tlen = int(val[0, V_SLOT]), int(val[0, V_TLEN])
         with self.arena.epoch():
             if self.journal is not None:
-                toks = np.array(self.tok_region.vol[slot, :tlen], np.int64)
+                toks = np.asarray(self.tok_region.read_at(
+                    np.asarray([slot], np.int64),
+                    slice(0, tlen))[0], np.int64)
                 self.journal.log(OP_COMPLETE, rid,
                                  digest=args_digest(toks), info=tlen)
             self.table.remove_batch(np.array([rid], np.int64))
@@ -396,8 +412,8 @@ def _reconstruct_engine(eng: "ServingEngine") -> dict:
     def prefill_group(key: Tuple[int, int]) -> float:
         shard, tl = key
         sel = slots[(shards == shard) & (tlens == tl)]
-        eng._prefill_slots(sel, np.array(eng.tok_region.vol[sel, :tl],
-                                         np.int32))
+        eng._prefill_slots(sel, np.asarray(
+            eng.tok_region.read_at(sel, slice(0, tl)), np.int32))
         with eng._admit_lock:
             eng.slot_ready[sel] = True
             admitted = time.perf_counter() - t0

@@ -42,6 +42,13 @@ class PagedConfig:
     # snapshot and replays only the suffix — TTFT-after-crash stays flat
     # as the page pool grows.
     snapshot: Optional[bool] = None
+    # paged regions (DESIGN.md §12): None defers to the REPRO_PAGED env
+    # gate (default off).  With paging on, the node slab's volatile side
+    # is an LRU block cache of `cache_blocks` x `block_bytes`, and
+    # recovery faults only the blocks it touches.
+    paged: Optional[bool] = None
+    block_bytes: int = 4096
+    cache_blocks: int = 1024
 
 
 class PagedAllocator:
@@ -58,7 +65,10 @@ class PagedAllocator:
         layout = DoublyLinkedList.layout(cfg.n_pages, cfg.mode, name="lru",
                                          snapshot=cfg.snapshot)
         self.arena = open_arena(path, layout, n_shards=cfg.n_shards,
-                                commit_mode=cfg.commit_mode)
+                                commit_mode=cfg.commit_mode,
+                                paged=cfg.paged,
+                                block_bytes=cfg.block_bytes,
+                                cache_blocks=cfg.cache_blocks)
         self.lru = DoublyLinkedList(self.arena, cfg.n_pages, cfg.mode,
                                     name="lru",
                                     chain_method=cfg.chain_method,
@@ -148,10 +158,11 @@ def _reconstruct_paged_alloc(pa: PagedAllocator) -> dict:
     reconstructed LRU — one vectorized pass over the node payloads
     instead of the per-node Python loop + `p not in used` scan."""
     order = pa.lru.order()          # materialized by the DLL reconstructor
-    pages = pa.lru.data[order, 0]
+    vals = pa.lru.data_rows(order)  # block-routed gather (no .data spill)
+    pages = vals[:, 0]
     pa.page_of_node = dict(zip(order.tolist(), pages.tolist()))
     pa.owner = np.full(pa.cfg.n_pages, -1, np.int64)
-    pa.owner[pages] = pa.lru.data[order, 1]
+    pa.owner[pages] = vals[:, 1]
     # boolean scatter, not np.isin: isin sorts both sides, an O(N log N)
     # constant that lands on the TTFT-after-crash path at large pools
     free = np.ones(pa.cfg.n_pages, bool)

@@ -406,6 +406,48 @@ def test_critical_path_follows_dependency_chain():
     assert [lvl for lvl in mgr.levels()] == [["a", "lone"], ["b"]]
 
 
+def test_concurrent_scheduler_runs_each_stage_exactly_once():
+    """Regression: a stage future can complete before its done-callback
+    attaches, running finished() INLINE in the submitting thread — mid
+    initial-submission-loop that can drop a LATER stage's dependency
+    counter to zero and submit it early, and the loop's own
+    remaining==0 check then submitted it AGAIN.  The duplicate
+    completion double-decremented its dependents' counters, so a stage
+    could start before a sibling dependency finished (observed as the
+    engine stage racing the journal replay).  Instant stages maximize
+    the inline-callback window; every stage must run exactly once and
+    only after its declared dependencies."""
+    from repro.core import reconstruct
+
+    if "test.counted" not in reconstruct.names():
+        @reconstruct.register("test.counted")
+        def _counted(state):
+            key, deps, runs, done, lock = state
+            with lock:
+                missing = [d for d in deps if d not in done]
+                assert not missing, f"{key} ran before {missing}"
+                runs[key] = runs.get(key, 0) + 1
+                done.add(key)
+            return {}
+
+    for _ in range(60):
+        runs: dict = {}
+        done: set = set()
+        lock = threading.Lock()
+
+        def st(key, *deps):
+            return (key, deps, runs, done, lock)
+
+        mgr = RecoveryManager()
+        mgr.add("a", "test.counted", st("a"))
+        mgr.add("b", "test.counted", st("b", "a"), depends=("a",))
+        mgr.add("c", "test.counted", st("c"))
+        mgr.add("d", "test.counted", st("d", "b", "c"),
+                depends=("b", "c"))
+        mgr.recover(reopen=False, concurrency=2)
+        assert runs == {"a": 1, "b": 1, "c": 1, "d": 1}
+
+
 # ------------------------------------------- engine early admission
 
 
