@@ -40,12 +40,17 @@ def arena_fields(a=None, **over) -> Dict:
     with no arena behind them (raw chain primitives, the ckpt restore)
     stamp ``commit_mode="none"`` and the working-set bytes instead."""
     f = {"commit_mode": "none", "n_shards": 1, "arena_bytes": 0,
-         "block_bytes": 0, "cache_blocks": 0, "peak_resident_bytes": 0}
+         "block_bytes": 0, "cache_blocks": 0, "peak_resident_bytes": 0,
+         "integrity": False, "integrity_lines": 0}
     if a is not None:
         f = {"commit_mode": a.commit_mode,
              "n_shards": int(getattr(a, "n_shards", 1)),
              "arena_bytes": int(sum(r.nbytes for r in a.regions.values())),
-             "block_bytes": 0, "cache_blocks": 0, "peak_resident_bytes": 0}
+             "block_bytes": 0, "cache_blocks": 0, "peak_resident_bytes": 0,
+             # checksum-sidecar accounting (DESIGN.md §13) rides on every
+             # row so integrity-on and -off artifacts stay distinguishable
+             "integrity": bool(getattr(a, "integrity", False)),
+             "integrity_lines": int(a.stats.integrity_lines)}
         # paged arenas (DESIGN.md §12) additionally stamp the block-cache
         # geometry and the high-water resident footprint, so paged rows
         # carry their memory budget next to their timings
@@ -77,19 +82,20 @@ class Cell:
 
 
 def make_structure(kind: str, mode: str, capacity: int,
-                   synth_line_ns: float = SYNTH_LINE_NS):
+                   synth_line_ns: float = SYNTH_LINE_NS,
+                   integrity: Optional[bool] = None):
     if kind == "dll":
         a = open_arena(None, DoublyLinkedList.layout(capacity, mode),
-                       synth_line_ns=synth_line_ns)
+                       synth_line_ns=synth_line_ns, integrity=integrity)
         return a, DoublyLinkedList(a, capacity, mode)
     if kind == "bptree":
         a = open_arena(None, BPTree.layout(max(64, capacity // 4),
                                            capacity, mode),
-                       synth_line_ns=synth_line_ns)
+                       synth_line_ns=synth_line_ns, integrity=integrity)
         return a, BPTree(a, max(64, capacity // 4), capacity, mode)
     if kind == "hashmap":
         a = open_arena(None, Hashmap.layout(capacity, mode),
-                       synth_line_ns=synth_line_ns)
+                       synth_line_ns=synth_line_ns, integrity=integrity)
         return a, Hashmap(a, capacity, mode)
     raise ValueError(kind)
 

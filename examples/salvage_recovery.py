@@ -1,0 +1,144 @@
+"""Bit rot -> scrub -> salvage: quarantine the loss, serve the rest.
+
+Builds a mixed three-structure arena (LRU ring + B+Tree + hashmap) on
+disk, crashes it, and flips ONE bit in a committed B+Tree leaf — the
+media fault the integrity sidecars exist for (DESIGN.md §13).  A scrub
+pass names the exact region and row, plain recovery would have
+reconstructed from the rotten line, and ``recover(salvage=True)``
+instead quarantines the damaged keys while the other two structures
+recover bit-identically.  Part two does the same to a serving engine's
+token log: the rid whose tokens rotted is refused with
+``QuarantinedError`` until an explicit ``readmit`` closes it out —
+corruption never silently re-enters the serving path.
+
+    PYTHONPATH=src python examples/salvage_recovery.py
+"""
+import os
+import tempfile
+
+import numpy as np
+
+from repro.core import faultinject as fi
+from repro.core.arena import QuarantinedError, open_arena
+from repro.core.recovery import RecoveryManager
+from repro.pstruct.bptree import BPTree
+from repro.pstruct.dll import DoublyLinkedList
+from repro.pstruct.hashmap import Hashmap
+
+
+def build(path):
+    layout = {}
+    layout.update(DoublyLinkedList.layout(256, "partly", name="dll"))
+    layout.update(BPTree.layout(256, 1024, "partly", name="bt"))
+    layout.update(Hashmap.layout(512, "partly", name="hm"))
+    a = open_arena(path, layout)
+    d = DoublyLinkedList(a, 256, "partly", name="dll")
+    t = BPTree(a, 256, 1024, "partly", name="bt")
+    h = Hashmap(a, 512, "partly", name="hm")
+    rng = np.random.default_rng(0)
+    key = 0
+    for i in range(30):
+        m = int(rng.integers(2, 7))
+        vals = rng.integers(0, 1 << 30, (m, 7)).astype(np.int64)
+        keys = np.arange(key, key + m, dtype=np.int64)
+        key += m
+        with a.epoch():
+            if i % 3 == 0:
+                d.append_batch(vals)
+            elif i % 3 == 1:
+                t.insert_batch(keys, vals)
+            else:
+                h.insert_batch(keys, vals)
+        a.commit()
+    return a, d, t, h
+
+
+def salvage_mixed(td):
+    a, d, t, h = build(os.path.join(td, "mixed.pm"))
+    dll_order = d.order().copy()
+    bt_keys = t.keys_in_order().copy()
+    hm_size = int(h.size)
+    leaf = int(t.leaves()[1])
+
+    a.crash()
+    fi.flip_bits(a, a.regions["bt.nodes"], leaf, byte=8, mask=0x40)
+    print(f"crashed, then one bit flipped in committed leaf row {leaf} "
+          f"of bt.nodes (media fault, not a torn write):")
+
+    bad = a.scrub()
+    for reg, rows in bad.items():
+        print(f"  scrub: {reg} rows {rows.tolist()} fail their "
+              f"line checksums")
+
+    mgr = RecoveryManager(a)
+    mgr.add("dll", "pstruct.dll", d)
+    mgr.add("bt", "pstruct.bptree", t)
+    mgr.add("hm", "pstruct.hashmap", h)
+    rep = mgr.recover(salvage=True)
+    print(f"  salvage recover in {rep.total_seconds * 1e3:.2f} ms: "
+          f"quarantined={rep.quarantined} degraded={rep.degraded}")
+
+    got = t.keys_in_order()
+    lost = sorted(t.quarantined)
+    assert set(got.tolist()) <= set(bt_keys.tolist())
+    assert set(lost).isdisjoint(got.tolist())
+    print(f"  bt: {got.size}/{bt_keys.size} keys survive, quarantined "
+          f"keys {lost} are withheld (disjoint from survivors)")
+
+    np.testing.assert_array_equal(d.order(), dll_order)
+    assert int(h.size) == hm_size
+    print(f"  dll ({dll_order.size} rows) and hm ({hm_size} keys) "
+          f"recover bit-identical — the loss never spreads")
+
+
+def salvage_engine(td):
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import base, registry
+    from repro.models.model import build as build_model
+    from repro.serve.engine import EngineConfig, ServingEngine
+
+    model = build_model(base.reduced(registry.get("llama3.2-3b")),
+                       compute_dtype=jnp.float32)
+    params = model.init_params(jax.random.PRNGKey(0))
+    eng = ServingEngine(model, params,
+                        EngineConfig(max_batch=3, s_max=16,
+                                     max_requests=16),
+                        arena_path=os.path.join(td, "engine"))
+    eng.add_request(7, np.array([1, 2, 3], np.int64))
+    eng.add_request(8, np.array([4, 5, 6, 9, 2], np.int64))
+    eng.step()
+    eng.crash()
+    fi.flip_bits(eng.arena, eng.arena.regions["tokens"], 0,
+                 byte=4, mask=0x10)           # rid 7's token-log row
+    print("\nengine crashed, rid 7's token-log line rotted:")
+
+    eng.recover(salvage=True)
+    st = eng.last_recovery.stage("engine")
+    print(f"  salvage recover: quarantined_rids="
+          f"{st.detail['quarantined_rids']}, rid 8 serves on")
+    out = eng.step()
+    assert 8 in out and 7 not in out
+
+    try:
+        eng.add_request(7, np.array([1, 2, 3], np.int64))
+        raise AssertionError("quarantined rid was admitted")
+    except QuarantinedError as e:
+        print(f"  re-admitting rid 7 refused: {e}")
+
+    eng.readmit([7])
+    assert eng.quarantined_rids == set()
+    print("  explicit readmit([7]) closes it out "
+          f"(journal state: {eng.journal.state_of(7)}); "
+          "corruption never silently re-enters the batch")
+
+
+def main():
+    with tempfile.TemporaryDirectory() as td:
+        salvage_mixed(td)
+        salvage_engine(td)
+
+
+if __name__ == "__main__":
+    main()

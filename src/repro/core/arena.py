@@ -66,6 +66,46 @@ _MAN_MAGIC = b"RPRM"
 _MAN_FMT = "<4sQQ?7x"     # magic, n_shards, generation, valid flag
 
 
+# ======================================================================
+# Integrity taxonomy (DESIGN.md §13)
+# ======================================================================
+
+
+class IntegrityError(RuntimeError):
+    """Base of the media-fault taxonomy: persistent bytes failed a trust
+    check that power loss alone cannot produce (checksum mismatch, shard
+    file gone, manifest/header magic garbage)."""
+
+
+class CorruptLineError(IntegrityError):
+    """Committed persistent line(s) fail their sidecar checksum."""
+
+    def __init__(self, region: str, rows, detail: str = ""):
+        self.region = region
+        self.rows = np.atleast_1d(np.asarray(rows, np.int64))
+        msg = (f"corrupt line(s) in region {region!r}, "
+               f"rows {self.rows[:8].tolist()}"
+               + (f" (+{self.rows.size - 8} more)"
+                  if self.rows.size > 8 else ""))
+        super().__init__(msg + (f": {detail}" if detail else ""))
+
+
+class ShardLossError(IntegrityError):
+    """A shard backing file is missing, truncated, or behind the
+    committed manifest generation — whole-device loss, not a torn
+    commit (torn commits leave shards AHEAD of the manifest)."""
+
+
+class ManifestError(IntegrityError):
+    """The arena commit header or the sharded manifest — the trust
+    anchors everything else hangs off — carry garbage magic/fields."""
+
+
+class QuarantinedError(RuntimeError):
+    """A request touched keys salvage recovery quarantined: refusing is
+    the contract — serving reconstructed garbage is not (DESIGN.md §13)."""
+
+
 @dataclass
 class FlushStats:
     lines: int = 0
@@ -86,6 +126,8 @@ class FlushStats:
     journal_lines: int = 0   # request-journal ring lines (DESIGN.md §11) —
                              # same separation: journal-off data accounting
                              # is bit-identical to journal-on
+    integrity_lines: int = 0  # checksum-sidecar lines (DESIGN.md §13) —
+                              # integrity-off accounting stays bit-identical
 
     def snapshot(self) -> "FlushStats":
         return dataclasses.replace(self)
@@ -162,6 +204,12 @@ class Region(_RowAccess):
         # committed head counter on a metadata line) whose lines are
         # accounted in FlushStats.journal_lines.
         self.jrnl = ".jrnl" in name
+        # Integrity-sidecar regions (DESIGN.md §13): per-line checksums
+        # of a data region, written by the SAME drain that moves the
+        # data rows (never marked by structures), accounted in
+        # FlushStats.integrity_lines.
+        self.integ = name.endswith(".integ")
+        self._integ: Optional["Region"] = None   # my sidecar, if covered
         # Metadata regions (structure headers) flush AFTER data regions
         # within an epoch — data-before-metadata ordering (DESIGN.md §2).
         self.meta = (name.endswith("header") or self.snap) \
@@ -211,8 +259,10 @@ class Region(_RowAccess):
         pv = self._pview()
         pv[rows] = self._gather(rows)
         self.arena._account_rows(self.offset, self.rowbytes, rows,
-                                 snap=self.snap, jrnl=self.jrnl)
+                                 snap=self.snap, jrnl=self.jrnl,
+                                 integ=self.integ)
         self._note_persisted(rows)
+        self.arena._integrity_home(self, rows)
 
     def mark_rows(self, rows: np.ndarray, fresh: bool = False) -> None:
         """Add rows to the arena's write set (flushed once, deduplicated,
@@ -240,8 +290,10 @@ class Region(_RowAccess):
         pv[lo:hi] = self._gather_range(lo, hi)
         self.arena._account_range(self.offset + lo * self.rowbytes,
                                   (hi - lo) * self.rowbytes,
-                                  snap=self.snap, jrnl=self.jrnl)
+                                  snap=self.snap, jrnl=self.jrnl,
+                                  integ=self.integ)
         self._note_persisted_range(lo, hi)
+        self.arena._integrity_home(self, np.arange(lo, hi, dtype=np.int64))
 
     def persist_all(self) -> None:
         self.persist_range(0, self.shape[0])
@@ -261,11 +313,17 @@ class Arena:
     def __init__(self, path: Optional[str], synth_line_ns: float = 0.0,
                  pack_flush_rows: int = 0, commit_mode: str = "barrier",
                  synth_fence_ns: float = 0.0, paged: Optional[bool] = None,
-                 block_bytes: int = 4096, cache_blocks: int = 1024):
+                 block_bytes: int = 4096, cache_blocks: int = 1024,
+                 integrity: Optional[bool] = None):
         assert commit_mode in ("barrier", "shadow")
         self.path = path
         self.regions: Dict[str, Region] = {}
         self.stats = FlushStats()
+        # Integrity sidecars (DESIGN.md §13): finalize() appends a
+        # per-line checksum region per covered data region, written by
+        # the epoch drain itself.  Integrity-off layouts and accounting
+        # are bit-identical to the pre-integrity substrate.
+        self.integrity = integrity_enabled(integrity)
         # Paged-region backend (DESIGN.md §12): eligible data regions
         # fault fixed-size blocks through a per-arena LRU cache instead
         # of materializing a full-shape volatile array.  Strictly
@@ -368,6 +426,8 @@ class Arena:
 
     def finalize(self) -> None:
         assert not self._layout_final
+        if self.integrity:
+            self._integrity_layout()
         self._layout_final = True
         if self.commit_mode == "shadow":
             self._shadow_layout()
@@ -379,8 +439,23 @@ class Arena:
             if create:
                 with open(self.path, "wb") as f:
                     f.truncate(total)
-            self._mm = np.memmap(self.path, dtype=np.uint8, mode="r+",
-                                 shape=(total,))
+            elif os.path.getsize(self.path) < total:
+                # an existing-but-short backing file is media loss, not
+                # a layout bug.  np.memmap in r+ mode would silently
+                # re-extend it with zeros — zeros that also wipe the
+                # integrity sidecars back to the never-written sentinel,
+                # making the loss invisible to scrub — so the size check
+                # must happen BEFORE mapping.
+                raise ShardLossError(
+                    f"backing file {self.path!r} truncated: "
+                    f"{os.path.getsize(self.path)} < {total} bytes")
+            try:
+                self._mm = np.memmap(self.path, dtype=np.uint8, mode="r+",
+                                     shape=(total,))
+            except (ValueError, OSError) as e:
+                raise ShardLossError(
+                    f"backing file {self.path!r} unmappable at "
+                    f"{total} bytes: {e}") from e
             if create:
                 self._write_header(valid=False)
         # sidecar layout description (tiny, metadata-only)
@@ -395,6 +470,102 @@ class Arena:
         Drained by the write set exactly once per commit, inside the
         active commit protocol."""
         self._snap_providers.append(fn)
+
+    # -- integrity sidecars (DESIGN.md §13) --------------------------------
+    def _integrity_layout(self) -> None:
+        """Append one checksum sidecar per covered data region: int64
+        rows of shape (rows, chunks) where each word checksums one 64 B
+        line of the source row (whole row when rows are sub-line).
+        Appending AFTER every declared region keeps integrity-on
+        layouts a pure suffix of integrity-off ones — existing region
+        offsets never move."""
+        for name, r in list(self.regions.items()):
+            if r.meta or r.snap or r.jrnl or r.integ or r.rowbytes % 8:
+                continue
+            if getattr(r, "_parent", None) is not None:
+                continue            # shard slices: the parent covers them
+            sc = self.region(name + ".integ", np.int64,
+                             (r.shape[0], _integ_chunks(r.rowbytes)),
+                             meta=False)
+            r._integ = sc
+
+    def _integrity_home(self, region, rows: np.ndarray,
+                        data: Optional[np.ndarray] = None) -> None:
+        """Recompute + persist `rows`' sidecar checksums IN PLACE — the
+        companion of every home write of the data rows themselves
+        (barrier drains, fresh shadow rows, direct persists), so data
+        and checksums always move in the same flush phase and a torn
+        crash can never split them.  ``data``, when the caller already
+        gathered the rows (the epoch drain always has), skips a second
+        gather."""
+        sc = region._integ
+        if sc is None or rows.size == 0:
+            return
+        if data is None:
+            data = region._gather(rows)
+        ck = sidecar_checksums(data, sc.shape[1])
+        sc.write_rows(rows, ck)
+        sc._pview()[rows] = ck
+        self._account_rows(sc.offset, sc.rowbytes, rows, integ=True)
+
+    def verify_header(self) -> None:
+        """Raise ManifestError when the commit header's magic is neither
+        ours nor the all-zero never-committed state — field corruption
+        power loss cannot produce (the header is one atomic line)."""
+        raw = bytes(self._mm[:4])
+        if raw not in (_MAGIC, b"\x00\x00\x00\x00"):
+            raise ManifestError(
+                f"arena {self.path!r} header magic {raw!r} corrupt")
+
+    def _pimage(self, region) -> np.ndarray:
+        """The COMMITTED persistent image of a region: home bytes plus
+        the authoritative shadow bank's overlay.  A pure read — scrub
+        and salvage never write persistent state."""
+        img = np.array(region._pview())
+        if self.commit_mode == "shadow":
+            mask = self._shadow_masks[self._shadow_auth_bank].get(
+                region.name)
+            if mask is not None and mask.any():
+                rows = np.nonzero(mask)[0]
+                img[rows] = self._shadow_mirror(
+                    region, self._shadow_auth_bank)[rows]
+        return img
+
+    def verify_region(self, region) -> np.ndarray:
+        """Row indices of `region` whose committed persistent bytes fail
+        their sidecar checksums (empty = clean).  Reads the persistent
+        image only — in-flight volatile writes and pending epoch marks
+        are invisible to it, and rows whose lines were never flushed
+        carry the 0 \"no checksum\" sentinel and are skipped — so scrub
+        under traffic cannot false-positive (DESIGN.md §13)."""
+        if isinstance(region, str):
+            region = self.regions[region]
+        sc = region._integ
+        if sc is None:
+            return np.empty(0, np.int64)
+        ck = sidecar_checksums(self._pimage(region), sc.shape[1])
+        ref = self._pimage(sc)
+        bad = (ref != 0) & (ck != ref)
+        self.synth_read(region.nbytes + sc.nbytes)
+        return np.nonzero(bad.any(axis=1))[0]
+
+    def scrub(self, raise_on_error: bool = False
+              ) -> Dict[str, np.ndarray]:
+        """Verify every covered region against its sidecar; returns
+        {region name: bad rows} for the regions that fail (empty dict =
+        media clean).  Read-only and crash-safe at any instant."""
+        bad: Dict[str, np.ndarray] = {}
+        for name, r in self.regions.items():
+            if r._integ is None:
+                continue
+            rows = self.verify_region(r)
+            if rows.size:
+                bad[name] = rows
+        if bad and raise_on_error:
+            name, rows = next(iter(bad.items()))
+            raise CorruptLineError(name, rows,
+                                   detail=f"scrub: {len(bad)} region(s)")
+        return bad
 
     # -- header / commit protocol -----------------------------------------
     def _write_header(self, valid: bool) -> None:
@@ -506,7 +677,8 @@ class Arena:
         mask[rows] = True
         self._shadow_mirror(region, b)[rows] = region._gather(rows)
         self._account_rows(region._shadow_off[b], region.rowbytes, rows,
-                           snap=region.snap, jrnl=region.jrnl)
+                           snap=region.snap, jrnl=region.jrnl,
+                           integ=region.integ)
         if new.size:
             cnt = self._shadow_counts[b]
             ents = self._shadow_entries(b)
@@ -514,12 +686,19 @@ class Arena:
             ents[cnt:cnt + new.size, 1] = new
             self._account_range(self._shadow_ent_off[b] + cnt * 16,
                                 int(new.size) * 16, snap=region.snap,
-                                jrnl=region.jrnl)
+                                jrnl=region.jrnl, integ=region.integ)
             self._shadow_counts[b] = cnt + int(new.size)
         # The rows' volatile values are now captured persistently in the
         # target-bank mirror, which a paged refault overlays — so their
         # dirty bits may clear (clean blocks become evictable).
         region._note_flushed(rows)
+        # cascade: the rows' checksums route through the SAME bank, so a
+        # discarded target bank drops data and checksums together
+        sc = region._integ
+        if sc is not None:
+            sc.write_rows(rows, sidecar_checksums(region._gather(rows),
+                                                  sc.shape[1]))
+            self._shadow_write(sc, rows)
 
     def _shadow_collapse(self, limit: Optional[int] = None) -> bool:
         """Fold the committed bank's shadow rows into their home slots —
@@ -544,7 +723,8 @@ class Arena:
             region = self.regions[name]
             region._pview()[rows] = self._shadow_mirror(region, b)[rows]
             self._account_rows(region.offset, region.rowbytes, rows,
-                               snap=region.snap, jrnl=region.jrnl)
+                               snap=region.snap, jrnl=region.jrnl,
+                               integ=region.integ)
         if done:
             self._shadow_collapsed[b] = True
         return done
@@ -677,7 +857,8 @@ class Arena:
 
     # -- accounting ---------------------------------------------------------
     def _account_range(self, byte_off: int, nbytes: int,
-                       snap: bool = False, jrnl: bool = False) -> None:
+                       snap: bool = False, jrnl: bool = False,
+                       integ: bool = False) -> None:
         lo = (byte_off // LINE) * LINE
         hi = _align(byte_off + nbytes, LINE)
         lines = (hi - lo) // LINE
@@ -693,6 +874,11 @@ class Arena:
             self.stats.journal_lines += lines
             self._synth(lines)
             return
+        if integ:
+            # checksum sidecars too (DESIGN.md §13)
+            self.stats.integrity_lines += lines
+            self._synth(lines)
+            return
         self.stats.lines += lines
         self.stats.bytes += nbytes
         self.stats.calls += 1
@@ -704,6 +890,14 @@ class Arena:
         if rowbytes % LINE == 0 and base % LINE == 0:
             # aligned rows: rows * rowbytes/LINE lines, coalescing irrelevant
             return int(rows.size) * (rowbytes // LINE)
+        if rowbytes and LINE % rowbytes == 0 and base % LINE == 0:
+            # sub-line rows that tile lines exactly (the checksum
+            # sidecars: 8/16/32 B rows) — sorted-unique rows sharing a
+            # line are adjacent, so distinct lines = breaks + 1
+            per = LINE // rowbytes
+            if rows.size == 0:
+                return 0
+            return int(np.count_nonzero(np.diff(rows // per))) + 1
         # exact distinct-line count over sorted row intervals (adjacent
         # rows may share a line — the Fig-12 unaligned-flush effect)
         starts = (base + rows * rowbytes) // LINE
@@ -713,7 +907,8 @@ class Arena:
         return int(np.sum(np.maximum(0, ends - starts + 1)))
 
     def _account_rows(self, base: int, rowbytes: int, rows: np.ndarray,
-                      snap: bool = False, jrnl: bool = False) -> None:
+                      snap: bool = False, jrnl: bool = False,
+                      integ: bool = False) -> None:
         lines = self._rows_line_count(base, rowbytes, rows)
         if snap:
             self.stats.snapshot_lines += lines
@@ -721,6 +916,10 @@ class Arena:
             return
         if jrnl:
             self.stats.journal_lines += lines
+            self._synth(lines)
+            return
+        if integ:
+            self.stats.integrity_lines += lines
             self._synth(lines)
             return
         self.stats.lines += lines
@@ -795,10 +994,15 @@ def _align(x: int, a: int) -> int:
 
 
 def _splitmix64(x: np.ndarray) -> np.ndarray:
-    x = x.astype(np.uint64)
+    # 0-d arrays route through numpy's *scalar* ufunc paths, which WARN
+    # on the intended uint64 wraparound; compute 1-D (a view) and
+    # restore the shape so >=1-d callers pay nothing
+    x = np.asarray(x).astype(np.uint64, copy=False)
+    shape = x.shape
+    x = x.reshape(-1)
     x = (x ^ (x >> np.uint64(30))) * np.uint64(0xBF58476D1CE4E5B9)
     x = (x ^ (x >> np.uint64(27))) * np.uint64(0x94D049BB133111EB)
-    return x ^ (x >> np.uint64(31))
+    return (x ^ (x >> np.uint64(31))).reshape(shape)
 
 
 # ======================================================================
@@ -841,6 +1045,16 @@ def paged_enabled(flag: Optional[bool] = None) -> bool:
     return os.environ.get("REPRO_PAGED", "0") != "0"
 
 
+def integrity_enabled(flag: Optional[bool] = None) -> bool:
+    """Resolve an arena's ``integrity=`` ctor arg: an explicit flag
+    wins; ``None`` defers to the ``REPRO_INTEGRITY`` env axis (default
+    ON).  Integrity-off layouts and flush accounting are bit-identical
+    to the pre-integrity substrate (DESIGN.md §13)."""
+    if flag is not None:
+        return bool(flag)
+    return os.environ.get("REPRO_INTEGRITY", "1") != "0"
+
+
 def _paged_eligible(name: str, meta: Optional[bool], dtype, shape,
                     block_bytes: int) -> bool:
     """Data regions bigger than one block page; headers, order
@@ -850,11 +1064,78 @@ def _paged_eligible(name: str, meta: Optional[bool], dtype, shape,
     never allocated twice."""
     snap = ".snap" in name
     jrnl = ".jrnl" in name
+    integ = name.endswith(".integ")
     m = (name.endswith("header") or snap) if meta is None else meta
     rowbytes = int(np.dtype(dtype).itemsize *
                    np.prod(shape[1:], dtype=np.int64)) \
         if len(shape) > 1 else np.dtype(dtype).itemsize
-    return not (m or snap or jrnl) and rowbytes * shape[0] > block_bytes
+    return (not (m or snap or jrnl or integ)
+            and rowbytes * shape[0] > block_bytes)
+
+
+_POS_KEYS: Dict[int, np.ndarray] = {}
+
+
+def _pos_keys(n: int) -> np.ndarray:
+    """``n`` distinct odd 64-bit multipliers, one per word position —
+    splitmix64 of the position, forced odd so each per-word multiply is
+    a bijection mod 2**64."""
+    k = _POS_KEYS.get(n)
+    if k is None:
+        k = _splitmix64(np.arange(1, n + 1, dtype=np.uint64)) \
+            | np.uint64(1)
+        _POS_KEYS[n] = k
+    return k
+
+
+def mix_checksums(words: np.ndarray) -> np.ndarray:
+    """THE checksum of the substrate (DESIGN.md §10/§11/§13): each word
+    multiplied by a distinct odd position key (a bijection mod 2**64,
+    so any change to any word changes its term), xor-folded over the
+    trailing axis, splitmix64-finalized for avalanche.  ``(..., k)``
+    integer words -> ``(...)`` int64.  One vectorized helper serves
+    snapshot records, journal slots, and the integrity sidecar — a torn
+    or bit-rotted line fails it with overwhelming probability, and the
+    per-position keys catch the word swaps plain xor would miss.  The
+    multilinear shape keeps the hot path at one multiply per word: this
+    runs inside every epoch drain, where its cost is bounded against
+    the flush itself (the --integrity-overhead gate)."""
+    w = np.asarray(words)
+    # int64 -> uint64 is a bit-reinterpretation: view when contiguous
+    # (the drain's gathered rows always are) instead of copying
+    if w.dtype == np.int64 and w.flags.c_contiguous:
+        w = w.view(np.uint64)
+    elif w.dtype != np.uint64:
+        w = w.astype(np.uint64)
+    shape = w.shape[:-1]
+    w = np.atleast_2d(w)          # 1-D input: keep off scalar ufunc paths
+    k = _pos_keys(w.shape[-1])
+    # unrolled fold: ufunc .reduce over a short trailing axis is the
+    # slowest op on the drain's hot path, and k is <= 8 for every
+    # caller (one line = 8 words)
+    acc = w[..., 0] * k[0]
+    for j in range(1, w.shape[-1]):
+        acc = acc ^ (w[..., j] * k[j])
+    return _splitmix64(acc).astype(np.int64).reshape(shape)
+
+
+def _integ_chunks(rowbytes: int) -> int:
+    """Checksum words per sidecar row: one per 64 B line of the source
+    row, or one for the whole row when rows are sub-line."""
+    return rowbytes // LINE if rowbytes % LINE == 0 and rowbytes else 1
+
+
+def sidecar_checksums(arr: np.ndarray, chunks: int) -> np.ndarray:
+    """Per-line checksums of gathered rows: ``(m, ...)`` rows of any
+    8-byte-divisible dtype -> ``(m, chunks)`` int64, one word per 64 B
+    line (per whole row for sub-line rows).  0 is reserved as the
+    sidecar's \"never checksummed\" sentinel, so a computed 0 nudges
+    to 1."""
+    m = arr.shape[0]
+    w = np.ascontiguousarray(arr).reshape(m, -1).view(np.uint64)
+    ck = mix_checksums(w.reshape(m, chunks, -1))
+    ck[ck == 0] = 1
+    return ck
 
 
 def snap_checksum(rec: np.ndarray) -> int:
@@ -863,9 +1144,7 @@ def snap_checksum(rec: np.ndarray) -> int:
     substrate can produce) fails this with overwhelming probability, so
     recovery can reject it without any ordering requirement between the
     record and the ring rows it describes."""
-    w = np.asarray(rec, np.int64)[:7].astype(np.uint64)
-    mixed = _splitmix64(w + np.arange(1, 8, dtype=np.uint64))
-    return int(np.bitwise_xor.reduce(mixed).astype(np.int64))
+    return int(mix_checksums(np.asarray(rec, np.int64)[:7]))
 
 
 def snap_record_pack(gen: int, seq: int, a: int, b: int, c: int,
@@ -975,6 +1254,12 @@ class _ShardSlice(Region):
     def _gather_range(self, lo: int, hi: int) -> np.ndarray:
         return self._parent._vol_rows(self._gidx[lo:hi])
 
+    def write_rows(self, rows: np.ndarray, vals) -> None:
+        # sidecar cascades write slice-local rows; the one volatile copy
+        # lives in the parent, global-indexed
+        self._parent.write_rows(self._gidx[np.asarray(rows, np.int64)],
+                                vals)
+
     def _pack_source(self, rows: np.ndarray):
         return self._parent._pack_source_global(self._gidx[rows])
 
@@ -1012,6 +1297,8 @@ class ShardedRegion(_RowAccess):
         self.shape = tuple(shape)
         self.snap = ".snap" in name
         self.jrnl = ".jrnl" in name
+        self.integ = name.endswith(".integ")
+        self._integ: Optional["ShardedRegion"] = None
         self.meta = (name.endswith("header") or self.snap) \
             if meta is None else meta
         self.rowbytes = int(self.dtype.itemsize *
@@ -1162,17 +1449,23 @@ class ShardedArena:
                  synth_line_ns: float = 0.0, pack_flush_rows: int = 0,
                  commit_mode: str = "barrier", synth_fence_ns: float = 0.0,
                  paged: Optional[bool] = None, block_bytes: int = 4096,
-                 cache_blocks: int = 1024):
+                 cache_blocks: int = 1024,
+                 integrity: Optional[bool] = None):
         assert n_shards >= 1
         assert commit_mode in ("barrier", "shadow")
         self.path = path
         self.n_shards = int(n_shards)
+        # sidecars are declared at the SHARDED level (same router as
+        # their source region, so a row's checksum lives on the row's
+        # shard); shard sub-arenas must not re-derive their own
+        self.integrity = integrity_enabled(integrity)
         # shard sub-arenas are pure persistence backends — the ONE block
         # cache (like the one volatile image it replaces) lives at the
         # sharded level, so shards are always opened unpaged
         self.shards = [Arena(f"{path}.s{k}" if path else None,
                              synth_line_ns, pack_flush_rows,
-                             commit_mode=commit_mode, paged=False)
+                             commit_mode=commit_mode, paged=False,
+                             integrity=False)
                        for k in range(self.n_shards)]
         self.paged = paged_enabled(paged)
         self.block_bytes = int(block_bytes)
@@ -1249,6 +1542,8 @@ class ShardedArena:
 
     def finalize(self) -> None:
         assert not self._layout_final
+        if self.integrity:
+            self._integrity_layout()
         self._layout_final = True
         for sh in self.shards:
             sh.finalize()
@@ -1269,12 +1564,96 @@ class ShardedArena:
                 # mis-configured reopen fails loudly instead of mapping
                 # the wrong number of backing files
                 raw = bytes(self._man[: struct.calcsize(_MAN_FMT)])
-                magic, man_shards, _, _ = struct.unpack(_MAN_FMT, raw)
+                magic, man_shards, man_gen, man_valid = \
+                    struct.unpack(_MAN_FMT, raw)
                 if magic == _MAN_MAGIC and man_shards != self.n_shards:
                     raise ValueError(
                         f"arena at {self.path!r} was committed with "
                         f"{man_shards} shards, opened with "
                         f"{self.n_shards}")
+                if magic == _MAN_MAGIC and man_valid and man_gen > 0:
+                    # a valid manifest promises every shard reached at
+                    # least its generation (shards can only be AHEAD
+                    # across a torn commit).  A shard behind it — or
+                    # zeroed because the file vanished and was recreated
+                    # above — is media loss, not power loss.
+                    for k, sh in enumerate(self.shards):
+                        if not (sh.header_valid()
+                                and sh.header_generation() >= man_gen):
+                            raise ShardLossError(
+                                f"shard {k} ({sh.path!r}) lost or behind "
+                                f"manifest generation {man_gen}")
+
+    def _integrity_layout(self) -> None:
+        """Sharded sidecars: one per covered region, SAME router as the
+        source — a row and its checksum always commit through the same
+        shard's header, so the cross-shard atomicity argument (manifest-
+        last) covers them as a pair."""
+        for name, r in list(self.regions.items()):
+            if r.meta or r.snap or r.jrnl or r.integ or r.rowbytes % 8:
+                continue
+            sc = self.region(name + ".integ", np.int64,
+                             (r.shape[0], _integ_chunks(r.rowbytes)),
+                             meta=False, router=r.router)
+            r._integ = sc
+            for s in range(self.n_shards):
+                if r.slices[s] is not None:
+                    r.slices[s]._integ = sc.slices[s]
+
+    def verify_header(self) -> None:
+        """ManifestError on garbage manifest magic; delegate per-shard
+        header checks to each shard."""
+        raw = bytes(self._man[:4])
+        if raw not in (_MAN_MAGIC, b"\x00\x00\x00\x00"):
+            raise ManifestError(
+                f"arena {self.path!r} manifest magic {raw!r} corrupt")
+        for sh in self.shards:
+            sh.verify_header()
+
+    def _pimage(self, region: "ShardedRegion") -> np.ndarray:
+        """Committed persistent image assembled across shards (home
+        bytes + each shard's authoritative bank overlay) — pure read."""
+        img = np.zeros(region.shape, region.dtype)
+        for sl in region.slices:
+            if sl is None:
+                continue
+            img[sl._gidx] = sl._pview()
+            sh = sl.arena
+            if sh.commit_mode == "shadow":
+                mask = sh._shadow_masks[sh._shadow_auth_bank].get(sl.name)
+                if mask is not None and mask.any():
+                    rows = np.nonzero(mask)[0]
+                    img[sl._gidx[rows]] = sh._shadow_mirror(
+                        sl, sh._shadow_auth_bank)[rows]
+        return img
+
+    def verify_region(self, region) -> np.ndarray:
+        if isinstance(region, str):
+            region = self.regions[region]
+        sc = region._integ
+        if sc is None:
+            return np.empty(0, np.int64)
+        ck = sidecar_checksums(self._pimage(region), sc.shape[1])
+        ref = self._pimage(sc)
+        bad = (ref != 0) & (ck != ref)
+        for sh in self.shards:
+            sh.synth_read((region.nbytes + sc.nbytes) // self.n_shards)
+        return np.nonzero(bad.any(axis=1))[0]
+
+    def scrub(self, raise_on_error: bool = False
+              ) -> Dict[str, np.ndarray]:
+        bad: Dict[str, np.ndarray] = {}
+        for name, r in self.regions.items():
+            if r._integ is None:
+                continue
+            rows = self.verify_region(r)
+            if rows.size:
+                bad[name] = rows
+        if bad and raise_on_error:
+            name, rows = next(iter(bad.items()))
+            raise CorruptLineError(name, rows,
+                                   detail=f"scrub: {len(bad)} region(s)")
+        return bad
 
     # -- order snapshots (DESIGN.md §10) -----------------------------------
     def add_snapshot_provider(self, fn) -> None:

@@ -37,7 +37,8 @@ from typing import Dict, Optional
 
 import numpy as np
 
-from repro.core.arena import Region, ShardedRegion
+from repro.core.arena import (CorruptLineError, Region, ShardedRegion,
+                              sidecar_checksums)
 
 
 class BlockCache:
@@ -204,9 +205,35 @@ class _BlockPool:
         hi = min(lo + self._block_rows, self.shape[0])
         blk = (self._assemble(lo, hi) if self._armed
                else np.zeros((hi - lo,) + self.shape[1:], self.dtype))
+        if self._armed:
+            # fault-path verification (DESIGN.md §13): a corrupt block
+            # is rejected BEFORE admission, so no consumer ever reads
+            # silently-rotted bytes through the cache
+            self._verify_block(blk, lo, hi)
         self._resident[bid] = blk
         self._cache.admit(self, bid, blk.nbytes)
         return blk
+
+    def _verify_block(self, blk: np.ndarray, lo: int, hi: int) -> None:
+        """Check an assembled block against its sidecar checksums.  The
+        reference is assembled EXACTLY like the data (home + authority
+        bank + in-flight target bank, newer wins): data rows and their
+        sidecar lines always move in the same flush phase and bank, so
+        every flushed row has a matching reference and never-flushed
+        rows carry the 0 sentinel and are skipped."""
+        sc = self._integ
+        if sc is None:
+            return
+        ref = self._integ_ref(lo, hi)
+        live = ref != 0
+        if not live.any():
+            return
+        ck = sidecar_checksums(blk, sc.shape[1])
+        bad = live & (ck != ref)
+        if bad.any():
+            rows = lo + np.nonzero(bad.any(axis=1))[0]
+            raise CorruptLineError(self.name, rows,
+                                   detail="paged fault verification")
 
     def _blk_loop(self, rows: np.ndarray):
         """Group `rows` by block; yield (bid, block, local rows within
@@ -403,6 +430,23 @@ class PagedRegion(_BlockPool, Region):
         a.synth_read(blk.nbytes)
         return blk
 
+    def _integ_ref(self, lo: int, hi: int) -> np.ndarray:
+        """Sidecar checksums for rows [lo, hi), assembled with the same
+        overlay order as the data block itself (sidecars are never
+        paged, so this is a plain persistent read)."""
+        sc = self._integ
+        ref = np.array(sc._pview()[lo:hi])
+        a = self.arena
+        if a.commit_mode == "shadow":
+            auth = a._shadow_auth_bank
+            for bank in (auth, 1 - auth):
+                mask = a._shadow_masks[bank].get(sc.name)
+                if mask is not None:
+                    hit = np.nonzero(mask[lo:hi])[0]
+                    if hit.size:
+                        ref[hit] = a._shadow_mirror(sc, bank)[lo + hit]
+        return ref
+
     def load(self) -> None:
         """Lazy reload: drop every block.  The post-crash working set
         faults back in on demand — recovery reads what it touches."""
@@ -454,6 +498,28 @@ class PagedShardedRegion(_BlockPool, ShardedRegion):
             blk[pos] = sub
             shard.synth_read(int(pos.size) * self.rowbytes)
         return blk
+
+    def _integ_ref(self, lo: int, hi: int) -> np.ndarray:
+        sc = self._integ
+        ref = np.empty((hi - lo,) + sc.shape[1:], sc.dtype)
+        grows = np.arange(lo, hi, dtype=np.int64)
+        sh = sc.shard_of[grows]
+        for s in np.unique(sh):
+            pos = np.nonzero(sh == s)[0]
+            sl = sc.slices[s]
+            lr = sc.local_of[grows[pos]]
+            sub = np.array(sl._pview()[lr])
+            shard = self.arena.shards[s]
+            if shard.commit_mode == "shadow":
+                auth = shard._shadow_auth_bank
+                for bank in (auth, 1 - auth):
+                    mask = shard._shadow_masks[bank].get(sc.name)
+                    if mask is not None:
+                        hit = np.nonzero(mask[lr])[0]
+                        if hit.size:
+                            sub[hit] = shard._shadow_mirror(sl, bank)[lr[hit]]
+            ref[pos] = sub
+        return ref
 
     # slice gathers / notes route here with GLOBAL row ids
     def _vol_rows(self, grows: np.ndarray) -> np.ndarray:

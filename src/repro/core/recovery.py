@@ -63,6 +63,7 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core import reconstruct
+from repro.core.arena import IntegrityError
 
 NULL = -1
 
@@ -540,6 +541,12 @@ class StageReport:
     t_start: float = 0.0
     t_end: float = 0.0
     ready_at: float = 0.0
+    # Salvage-mode outcome (DESIGN.md §13): ``quarantined`` — the stage
+    # tripped on media corruption and its structure is untrusted;
+    # ``degraded`` — the stage ran on partial inputs (a dependency was
+    # quarantined) or salvaged around corrupt rows itself.
+    quarantined: bool = False
+    degraded: bool = False
 
     @property
     def queue_wait(self) -> float:
@@ -549,6 +556,7 @@ class StageReport:
         return {"name": self.name, "seconds": self.seconds,
                 "t_start": self.t_start, "t_end": self.t_end,
                 "ready_at": self.ready_at, "queue_wait": self.queue_wait,
+                "quarantined": self.quarantined, "degraded": self.degraded,
                 **self.detail}
 
 
@@ -573,6 +581,10 @@ class RecoveryReport:
     concurrency: int = 1
     critical_path_seconds: float = 0.0
     stages: List[StageReport] = field(default_factory=list)
+    # salvage mode (DESIGN.md §13): stage names that tripped on media
+    # corruption / ran degraded on partial inputs during this pass
+    quarantined: List[str] = field(default_factory=list)
+    degraded: List[str] = field(default_factory=list)
 
     @property
     def wall_ms(self) -> float:
@@ -607,6 +619,8 @@ class RecoveryReport:
                 "concurrency": self.concurrency,
                 "wall_ms": self.wall_ms, "total_ms": self.total_ms,
                 "critical_path_ms": self.critical_path_ms,
+                "quarantined": list(self.quarantined),
+                "degraded": list(self.degraded),
                 "stages": [s.as_dict() for s in self.stages]}
 
 
@@ -721,8 +735,18 @@ class RecoveryManager:
 
     # ----------------------------------------------------------- recover
     def recover(self, reopen: bool = True, concurrency: int = 1,
-                on_stage: Optional[Callable[[StageReport], None]] = None
-                ) -> RecoveryReport:
+                on_stage: Optional[Callable[[StageReport], None]] = None,
+                salvage: bool = False) -> RecoveryReport:
+        """``salvage=True`` (DESIGN.md §13) turns media corruption from
+        a recovery abort into degraded-mode recovery: a stage that trips
+        on an ``IntegrityError`` is QUARANTINED (reported, not raised),
+        its transitive dependents are skipped as DEGRADED, and every
+        structure off the corrupt dependency chain still rebuilds.
+        Reconstructors see ``arena._salvage == True`` for the duration
+        and may verify their own regions / drop provably-corrupt rows,
+        reporting ``degraded`` / ``quarantined`` through their detail
+        dict.  Default recovery stays trusting — detection is scrub's
+        and the paged fault path's job, not the hot recovery path's."""
         t_all = time.perf_counter()
         report = RecoveryReport(concurrency=max(1, int(concurrency)))
         lock = threading.Lock()
@@ -779,6 +803,13 @@ class RecoveryManager:
                                  if any(r.arena is a for r in rs)))
                 else:
                     a.reopen()
+                # garbage header/manifest magic is media corruption no
+                # power loss can produce — fail typed (ManifestError)
+                # before trusting the generation it claims, salvage or
+                # not (with no trustworthy generation there is no
+                # committed prefix to salvage toward)
+                if hasattr(a, "verify_header"):
+                    a.verify_header()
                 valids.append(bool(a.header_valid()))
             reopen_secs = time.perf_counter() - t0
             st = report.add("reopen", reopen_secs,
@@ -824,27 +855,75 @@ class RecoveryManager:
         def _cache_faults() -> int:
             return sum(c.faults for c in caches)
 
+        # salvage bookkeeping: stages whose output is untrusted (they
+        # tripped on corruption, or ran downstream of one that did).
+        # Mutated inside run_stage BEFORE its future resolves, so both
+        # schedulers see a dependency's taint before any dependent runs.
+        tainted: set = set()
+        if salvage:
+            for a in self.arenas:
+                a._salvage = True
+                for sh in getattr(a, "shards", ()):
+                    sh._salvage = True
+
         def run_stage(name: str) -> StageReport:
             t0 = time.perf_counter()
             faults0 = _cache_faults() if caches else 0
-            if name.startswith("load:"):
-                regions = split[name[5:]]
-                for region in regions:
-                    region.load(concurrency=report.concurrency)
-                secs = time.perf_counter() - t0
-                detail = {"rows": sum(int(r.shape[0]) for r in regions),
-                          "shards": int(regions[0].arena.n_shards)}
-            else:
-                it = items[name]
-                out, secs = reconstruct.run(it.reconstructor, it.target)
-                detail = dict(out) if isinstance(out, dict) else {}
-                detail.setdefault("reconstructor", it.reconstructor)
+            bad_deps = sorted(d for d in depends_of.get(name, ())
+                              if d in tainted)
+            if salvage and bad_deps:
+                # skipped, not failed: the stage itself is healthy but
+                # its inputs are quarantined — running it would serve
+                # reconstructed garbage
+                tainted.add(name)
+                st = StageReport(name, 0.0,
+                                 {"skipped": "quarantined dependency",
+                                  "tainted_deps": bad_deps},
+                                 t_start=t0 - t_all,
+                                 t_end=time.perf_counter() - t_all,
+                                 ready_at=ready_at.get(name, reopen_secs),
+                                 degraded=True)
+                emit(st)
+                return st
+            try:
+                if name.startswith("load:"):
+                    regions = split[name[5:]]
+                    for region in regions:
+                        region.load(concurrency=report.concurrency)
+                    secs = time.perf_counter() - t0
+                    detail = {"rows": sum(int(r.shape[0]) for r in regions),
+                              "shards": int(regions[0].arena.n_shards)}
+                else:
+                    it = items[name]
+                    out, secs = reconstruct.run(it.reconstructor, it.target)
+                    detail = dict(out) if isinstance(out, dict) else {}
+                    detail.setdefault("reconstructor", it.reconstructor)
+            except IntegrityError as e:
+                if not salvage:
+                    raise
+                tainted.add(name)
+                t1 = time.perf_counter()
+                st = StageReport(name, t1 - t0,
+                                 {"error": type(e).__name__,
+                                  "message": str(e)},
+                                 t_start=t0 - t_all, t_end=t1 - t_all,
+                                 ready_at=ready_at.get(name, reopen_secs),
+                                 quarantined=True)
+                emit(st)
+                return st
+            # a reconstructor may partially salvage on its own: it drops
+            # corrupt rows, keeps the rest, and reports through detail
+            quarantined = bool(detail.pop("quarantined", False))
+            degraded = bool(detail.pop("degraded", False))
+            if quarantined:
+                tainted.add(name)
             if caches:
                 detail["block_faults"] = _cache_faults() - faults0
             t1 = time.perf_counter()
             st = StageReport(name, secs, detail,
                              t_start=t0 - t_all, t_end=t1 - t_all,
-                             ready_at=ready_at.get(name, reopen_secs))
+                             ready_at=ready_at.get(name, reopen_secs),
+                             quarantined=quarantined, degraded=degraded)
             emit(st)
             return st
 
@@ -852,22 +931,33 @@ class RecoveryManager:
         depends_of = {n: [] for n in load_names}
         depends_of.update({n: list(items[n].depends) + load_deps[n]
                            for n in order})
-        if report.concurrency == 1:
-            # serial: topological order; a stage is "ready" the moment
-            # its last dependency finished
-            for name in full_order:
-                st = run_stage(name)
-                results[name] = st
-                for m in full_order:
-                    if name in depends_of[m]:
-                        ready_at[m] = max(ready_at.get(m, 0.0), st.t_end)
-        else:
-            self._run_counters(full_order, depends_of, run_stage, results,
-                               ready_at, report.concurrency, t_all)
+        try:
+            if report.concurrency == 1:
+                # serial: topological order; a stage is "ready" the moment
+                # its last dependency finished
+                for name in full_order:
+                    st = run_stage(name)
+                    results[name] = st
+                    for m in full_order:
+                        if name in depends_of[m]:
+                            ready_at[m] = max(ready_at.get(m, 0.0), st.t_end)
+            else:
+                self._run_counters(full_order, depends_of, run_stage,
+                                   results, ready_at, report.concurrency,
+                                   t_all)
+        finally:
+            if salvage:
+                for a in self.arenas:
+                    a._salvage = False
+                    for sh in getattr(a, "shards", ()):
+                        sh._salvage = False
         # deterministic report order — loads first, then level-major
         # stages — whatever the completion order was
         report.stages.extend(results[n] for n in full_order
                              if n in results)
+        report.quarantined = [s.name for s in report.stages
+                              if s.quarantined]
+        report.degraded = [s.name for s in report.stages if s.degraded]
         report.total_seconds = time.perf_counter() - t_all
         report.critical_path_seconds = reopen_secs + self._critical_path(
             full_order, depends_of,

@@ -149,7 +149,10 @@ class WriteSet:
             rows = np.unique(np.concatenate([r for r, _, _ in marks]))
             would_lines = sum(w for _, w, _ in marks)
             marked_rows = sum(r.size for r, _, _ in marks)
-            self._copy_rows(region, rows)
+            g = self._copy_rows(region, rows)
+            # the drain IS where checksums ride the write set: data rows
+            # and their sidecar lines move in the same phase, same fence
+            arena._integrity_home(region, rows, data=g)
             if region.snap or region.jrnl:
                 arena._account_rows(region.offset, region.rowbytes, rows,
                                     snap=region.snap, jrnl=region.jrnl)
@@ -191,9 +194,12 @@ class WriteSet:
                 marked_rows = sum(r.size for r, _, _ in marks)
                 before = arena.stats.lines
                 if fr.size:
-                    self._copy_rows(region, fr)
+                    g = self._copy_rows(region, fr)
                     arena._account_rows(region.offset, region.rowbytes, fr,
                                         snap=region.snap, jrnl=region.jrnl)
+                    # fresh rows flush home, so their checksums do too;
+                    # rewrites cascade inside _shadow_write (same bank)
+                    arena._integrity_home(region, fr, data=g)
                 if rew.size:
                     arena._shadow_write(region, rew)
                 if region.snap or region.jrnl:
@@ -206,17 +212,20 @@ class WriteSet:
                 flushed_any = True
         return flushed_any
 
-    def _copy_rows(self, region, rows: np.ndarray) -> None:
+    def _copy_rows(self, region, rows: np.ndarray) -> np.ndarray:
         pv = region._pview()
         if (self.arena.pack_flush_rows
                 and rows.size >= self.arena.pack_flush_rows):
             vol, vrows = region._pack_source(rows)
-            pv[rows] = _pack_gather(vol, vrows)
+            g = _pack_gather(vol, vrows)
         else:
-            pv[rows] = region._gather(rows)
+            g = region._gather(rows)
+        pv[rows] = g
         # the epoch drain IS the dirty-block write-back path: the rows
         # are home now, so a paged region may unpin their blocks
         region._note_flushed(rows)
+        # returned so the integrity sidecar reuses the gather
+        return g
 
 
 class ShardedWriteSet:
@@ -332,9 +341,12 @@ class ShardedWriteSet:
             before = shard.stats.lines
             with shard.stall_scope():
                 for sl, local in work[s]:
-                    self._copy_rows(sl, local)
+                    g = self._copy_rows(sl, local)
                     shard._account_rows(sl.offset, sl.rowbytes, local,
                                         snap=sl.snap, jrnl=sl.jrnl)
+                    # per-shard sidecar write: a row's checksum shares
+                    # its shard (same router), phase, and fence
+                    shard._integrity_home(sl, local, data=g)
             actual[s] = shard.stats.lines - before
 
         shards = sorted(work)
@@ -394,9 +406,10 @@ class ShardedWriteSet:
                 shard._shadow_collapse()
                 for sl, local, fresh in work.get(s, ()):
                     if fresh:
-                        self._copy_rows(sl, local)
+                        g = self._copy_rows(sl, local)
                         shard._account_rows(sl.offset, sl.rowbytes, local,
                                             snap=sl.snap, jrnl=sl.jrnl)
+                        shard._integrity_home(sl, local, data=g)
                     else:
                         shard._shadow_write(sl, local)
             actual[s] = shard.stats.lines - before
@@ -413,16 +426,18 @@ class ShardedWriteSet:
             m - n for _, m, n in region_rows)
         return True
 
-    def _copy_rows(self, sl, rows: np.ndarray) -> None:
+    def _copy_rows(self, sl, rows: np.ndarray) -> np.ndarray:
         pv = sl._pview()
         if (self.arena.pack_flush_rows
                 and rows.size >= self.arena.pack_flush_rows):
             vol, vrows = sl._pack_source(rows)
-            pv[rows] = _pack_gather(vol, vrows)
+            g = _pack_gather(vol, vrows)
         else:
-            pv[rows] = sl._gather(rows)
+            g = sl._gather(rows)
+        pv[rows] = g
         # write-back point for paged parents (slice forwards globally)
         sl._note_flushed(rows)
+        return g
 
 
 def _pack_gather(vol: np.ndarray, rows: np.ndarray) -> np.ndarray:

@@ -34,8 +34,9 @@ from typing import Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.core import reconstruct as rec
-from repro.core.arena import Arena, FlushStats
+from repro.core.arena import Arena, CorruptLineError, FlushStats
 from repro.core.recovery import chain_method, chain_order
+from repro.pstruct.dll import _salvage_bad_rows
 
 ORDER = 19
 MAX_KEYS = ORDER - 1           # 18
@@ -81,6 +82,9 @@ class BPTree:
         self._free_nodes: List[int] = []
         self._free_recs: List[int] = []
         self.leaf_prev = np.full(cap_nodes, NULL, np.int32)  # volatile
+        # keys lost to media corruption in the last salvage recovery
+        # (best effort: readable from intact-but-unreachable leaf rows)
+        self.quarantined: set = set()
 
     @staticmethod
     def layout(cap_nodes: int, cap_records: int, mode: str = "partly",
@@ -627,6 +631,7 @@ def _reconstruct_bptree(t: "BPTree") -> dict:
     doubling, cycle-checked), then bulk-load inner levels bucketing ORDER
     children per parent, one vectorized pass per level."""
     hv = t.header.vol[0]
+    t.quarantined = set()
     if hv[H_FLAG] != 1:
         # uninitialized image recovers as an empty tree (§IV-D3 validity
         # check on the root node)
@@ -637,17 +642,113 @@ def _reconstruct_bptree(t: "BPTree") -> dict:
         t._free_nodes = []
         t._free_recs = []
         return {"mode": t.mode, "count": 0}
+    salvage = bool(getattr(t.arena, "_salvage", False))
+    bad_nodes = (_salvage_bad_rows(t.arena, t.nodes) if salvage
+                 else np.empty(0, np.int64))
+    bad_recs = (_salvage_bad_rows(t.arena, t.records) if salvage
+                else np.empty(0, np.int64))
+    bad_nodes = bad_nodes[bad_nodes < t.cap_nodes]
+    bad_recs = bad_recs[bad_recs < t.cap_records]
+    corrupt = int(bad_nodes.size + bad_recs.size)
     if t.mode == "full":
+        if corrupt:
+            # a fully-persistent tree has parent/child pointers woven
+            # through every row — there is no committed-prefix remainder
+            # to keep, so the whole stage quarantines
+            raise CorruptLineError(
+                t.nodes.name if bad_nodes.size else t.records.name,
+                bad_nodes if bad_nodes.size else bad_recs,
+                detail="fully-persistent tree: no salvageable remainder")
         t._rebuild_volatile_only()
         return {"mode": "full", "count": int(hv[H_COUNT])}
+    detail = {"mode": "partly"}
     # 1. enumerate leaves via the persistent next chain
-    leaves = t.leaves()
+    if bad_nodes.size:
+        # salvage: keep the maximal leaf-chain prefix that never touches
+        # a corrupt row — everything downstream is unreachable without
+        # trusting rotten bytes
+        img = np.asarray(t.arena._pimage(t.nodes))
+        badset = set(bad_nodes.tolist())
+        fresh_n = int(hv[H_FRESH_NODES])
+        seen: set = set()
+        prefix: List[int] = []
+        cur = int(hv[H_FIRST_LEAF])
+        while 0 <= cur < fresh_n and cur not in badset and cur not in seen:
+            seen.add(cur)
+            prefix.append(cur)
+            cur = int(img[cur, C_NEXT])
+        leaves = np.asarray(prefix, np.int64)
+        if leaves.size:
+            t.nodes.vol[leaves[-1], C_NEXT] = NULL  # volatile chain cut
+        # name the lost keys best-effort: intact-but-unreachable leaf
+        # rows are readable even though the chain can no longer prove
+        # them live (stale freed leaves over-quarantine only keys that
+        # are absent anyway — refusal stays conservative); keys inside
+        # the corrupt rows themselves are unreadable and stay anonymous
+        for r in range(fresh_n):
+            if r in seen or r in badset or img[r, C_LEAF] != 1:
+                continue
+            nk = min(int(img[r, C_NK]), MAX_KEYS)
+            t.quarantined.update(int(k) for k in img[r, K0:K0 + nk])
+    else:
+        try:
+            leaves = t.leaves()
+        except (RuntimeError, ValueError) as e:
+            if not salvage:
+                raise
+            raise CorruptLineError(t.nodes.name, np.empty(0, np.int64),
+                                   detail=f"leaf chain rebuild: {e}") from e
     if leaves.size == 0:
         hv[H_ROOT] = NULL
+        if corrupt:
+            hv[H_FIRST_LEAF] = NULL
+            hv[H_COUNT] = 0
+            t.leaf_prev[:] = NULL
+            live = np.zeros(t.cap_nodes, bool)
+            live[bad_nodes] = True  # corrupt rows are never reusable
+            t._free_nodes = np.nonzero(
+                ~live[:int(hv[H_FRESH_NODES])])[0].tolist()
+            rec_live = np.zeros(t.cap_records, bool)
+            rec_live[bad_recs] = True
+            t._free_recs = np.nonzero(
+                ~rec_live[:int(hv[H_FRESH_RECS])])[0].tolist()
+            detail.update(count=0, quarantined=True, degraded=True,
+                          quarantined_rows=corrupt,
+                          quarantined_keys=sorted(t.quarantined))
+            return detail
         return {"mode": "partly", "count": 0}
     # 2. leaf prev (volatile redundancy)
     t.leaf_prev[:] = NULL
     t.leaf_prev[leaves[1:]] = leaves[:-1].astype(np.int32)
+    # 2b. salvage: drop leaf slots whose record row is corrupt — the key
+    #     is readable from the intact leaf, so it quarantines by name
+    if bad_recs.size:
+        badrec = np.zeros(t.cap_records, bool)
+        badrec[bad_recs] = True
+        for lf in leaves.tolist():
+            row = t.nodes.vol[lf]
+            nk = int(row[C_NK])
+            ptrs = row[P0:P0 + nk].astype(np.int64)
+            hit = badrec[ptrs]
+            if not hit.any():
+                continue
+            t.quarantined.update(int(k) for k in row[K0:K0 + nk][hit])
+            keep = ~hit
+            kept = int(keep.sum())
+            row[K0:K0 + kept] = row[K0:K0 + nk][keep]
+            row[P0:P0 + kept] = ptrs[keep].astype(np.int32)
+            row[K0 + kept:K0 + nk] = 0
+            row[P0 + kept:P0 + nk] = 0
+            row[C_NK] = kept
+    if corrupt:
+        rows = t.nodes.vol[leaves]
+        nk = rows[:, C_NK]
+        keymat = rows[:, K0:K1].astype(np.int64)
+        valid = np.arange(MAX_KEYS)[None, :] < nk[:, None]
+        t.quarantined -= set(keymat[valid].tolist())  # survivors aren't lost
+        hv[H_COUNT] = int(nk.sum())
+        detail.update(degraded=True, quarantined_rows=corrupt,
+                      quarantined_keys=sorted(t.quarantined))
     # 3. bulk-load inner levels, bucket size = ORDER (paper §IV-D:
     #    maximum bucket -> fewest levels, matches 256B granularity);
     #    subtree minima are the separators, tracked per level
@@ -656,6 +757,7 @@ def _reconstruct_bptree(t: "BPTree") -> dict:
     # wipe any stale inner rows: everything not a live leaf is free
     live = np.zeros(t.cap_nodes, bool)
     live[level] = True
+    live[bad_nodes] = True  # corrupt rows are never reusable
     while len(level) > 1:
         n_parents = (len(level) + ORDER - 1) // ORDER
         parents = t._alloc_nodes_reconstruct(n_parents, live)
@@ -666,9 +768,10 @@ def _reconstruct_bptree(t: "BPTree") -> dict:
     # 4. free lists: records referenced by live leaves are live
     t._free_nodes = np.nonzero(~live[:int(hv[H_FRESH_NODES])])[0].tolist()
     rec_live = t._live_record_mask(leaves)
+    rec_live[bad_recs] = True  # corrupt rows are never reusable
     t._free_recs = np.nonzero(
         ~rec_live[:int(hv[H_FRESH_RECS])])[0].tolist()
-    return {"mode": "partly", "count": int(hv[H_COUNT]),
-            "leaves": int(leaves.size),
-            "chain": chain_method(int(hv[H_FRESH_NODES]), None,
-                                  getattr(t, "chain_method", "auto"))}
+    detail.update(count=int(hv[H_COUNT]), leaves=int(leaves.size),
+                  chain=chain_method(int(hv[H_FRESH_NODES]), None,
+                                     getattr(t, "chain_method", "auto")))
+    return detail

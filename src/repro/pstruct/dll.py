@@ -30,9 +30,9 @@ from typing import Optional, Tuple
 import numpy as np
 
 from repro.core import reconstruct as rec
-from repro.core.arena import (Arena, FlushStats, SNAP_SLOTS, SNAP_WORDS,
-                              snap_record_pack, snap_record_parse,
-                              snapshot_enabled)
+from repro.core.arena import (Arena, CorruptLineError, FlushStats,
+                              SNAP_SLOTS, SNAP_WORDS, snap_record_pack,
+                              snap_record_parse, snapshot_enabled)
 from repro.core.recovery import ChainSnapshot, chain_method, chain_order
 
 NULL = -1
@@ -479,6 +479,15 @@ def _gather_verify(nodes, head: int, count: int, cand: np.ndarray,
     return True
 
 
+def _salvage_bad_rows(arena, region) -> np.ndarray:
+    """Rows of a structure's primary region failing their sidecar
+    checksums (empty when the arena carries no integrity layer) —
+    the shared salvage-mode probe (DESIGN.md §13)."""
+    if not getattr(arena, "integrity", False):
+        return np.empty(0, np.int64)
+    return arena.verify_region(region)
+
+
 @rec.register("pstruct.dll")
 def _reconstruct_dll(d: "DoublyLinkedList") -> dict:
     """Pure rebuild of the DLL's volatile redundancy from its (already
@@ -507,22 +516,73 @@ def _reconstruct_dll(d: "DoublyLinkedList") -> dict:
     # The committed COUNT bounds the walk: rows appended by a torn epoch
     # (data flushed, header not) stay unreachable.
     method = getattr(d, "chain_method", "auto")
-    snap = _snap_candidate(d, count) if snap_on else None
-    if getattr(d.nodes, "paged_active", False) and snap is not None \
-            and _gather_verify(d.nodes, head, count, snap.candidate,
-                               d.capacity):
-        # paged fast path: adopt the verified snapshot WITHOUT touching
-        # the full NEXT column — recovery faults only the candidate
-        # rows' blocks, so its cost tracks the working set
-        snap.outcome = "snapshot"
-        order = snap.candidate.astype(np.int64, copy=True)
+    salvage = getattr(d.arena, "_salvage", False)
+    bad = _salvage_bad_rows(d.arena, d.nodes) if salvage \
+        else np.empty(0, np.int64)
+    dropped = 0
+    if bad.size:
+        # salvage walk (DESIGN.md §13): corrupt rows terminate the
+        # chain — the recovered list is the maximal committed prefix
+        # whose every node verifies.  Reads the committed persistent
+        # image directly (never through the block cache, whose fault
+        # verification would reject whole blocks a corrupt neighbor
+        # shares with healthy prefix rows).
+        nxt = np.asarray(d.arena._pimage(d.nodes))[:, DATA_WORDS]
+        badset = set(bad.tolist())
+        seen: set = set()
+        prefix: list[int] = []
+        cur = head
+        while (len(prefix) < count and 0 <= cur < d.capacity
+               and cur not in badset and cur not in seen):
+            prefix.append(cur)
+            seen.add(cur)
+            cur = int(nxt[cur])
+        order = np.asarray(prefix, np.int64)
+        dropped = count - int(order.size)
+        snap = None
+        if order.size == 0:
+            hv[:] = 0
+            hv[H_HEAD] = NULL
+            hv[H_TAIL] = NULL
+            d._free = []
+            d._r0 = d._r1 = 0
+            if snap_on:
+                _snap_resume(d)
+            return {"mode": d.mode, "count": 0, "quarantined": True,
+                    "quarantined_rows": dropped}
+        count = int(order.size)
+        hv[H_COUNT] = count
     else:
-        order = chain_order(d._next_col(), head, count, method=method,
-                            snapshot=snap)
+        snap = _snap_candidate(d, count) if snap_on else None
+        if getattr(d.nodes, "paged_active", False) and snap is not None \
+                and _gather_verify(d.nodes, head, count, snap.candidate,
+                                   d.capacity):
+            # paged fast path: adopt the verified snapshot WITHOUT
+            # touching the full NEXT column — recovery faults only the
+            # candidate rows' blocks, so its cost tracks the working set
+            snap.outcome = "snapshot"
+            order = snap.candidate.astype(np.int64, copy=True)
+        else:
+            try:
+                order = chain_order(d._next_col(), head, count,
+                                    method=method, snapshot=snap)
+            except (RuntimeError, ValueError) as e:
+                if salvage:
+                    # structurally impossible chain (cycle / short walk)
+                    # with no sidecar to localize it: the whole
+                    # structure is untrusted
+                    raise CorruptLineError(
+                        d.nodes.name, np.empty(0, np.int64),
+                        detail=f"chain rebuild: {e}") from e
+                raise
     d.prev[order[1:]] = order[:-1]
     hv[H_TAIL] = order[-1]
     live = np.zeros(d.capacity, bool)
     live[order] = True
+    # quarantined rows are neither live nor reusable: keeping them out
+    # of the free list stops a later insert from resurrecting rot
+    if bad.size:
+        live[bad[bad < d.capacity]] = True
     # Fresh-water mark: everything at/above the max live id is fresh.
     fresh = int(order.max()) + 1
     hv[H_FRESH] = fresh
@@ -539,6 +599,9 @@ def _reconstruct_dll(d: "DoublyLinkedList") -> dict:
         d.nodes.write_at(order[:1], DATA_WORDS + 1, NULL)
     detail = {"mode": d.mode, "count": count,
               "chain": chain_method(d.capacity, count, method)}
+    if dropped:
+        detail.update(degraded=True, quarantined_rows=dropped,
+                      chain="salvage")
     if snap_on:
         # outcome: "snapshot" (seeded, suffix-only replay) or the full
         # fallback rank the verify pass forced; replayed = rows walked

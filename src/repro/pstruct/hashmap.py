@@ -33,6 +33,7 @@ from repro.core.arena import (Arena, FlushStats, SNAP_SLOTS, SNAP_WORDS,
                               snap_record_pack, snap_record_parse,
                               snapshot_enabled)
 from repro.core.recovery import chain_walk
+from repro.pstruct.dll import _salvage_bad_rows
 
 NULL = -1
 KEY_NULL = np.int64(-(2 ** 62))  # tombstone / empty key sentinel
@@ -90,6 +91,10 @@ class Hashmap:
         self.buckets = np.full(self.n_buckets, NULL, np.int64)  # volatile
         self.chain = np.full(capacity, NULL, np.int64)  # volatile next
         self.hashes = np.zeros(capacity, np.uint64)  # volatile cached hash
+        # keys whose entry rows were dropped by salvage recovery
+        # (DESIGN.md §13) — consumers refuse these instead of serving
+        # reconstructed garbage
+        self.quarantined: set = set()
         # incremental order snapshots (DESIGN.md §10): persisted mirrors
         # of the volatile bucket heads + chain links, plus a 4-slot
         # sealed-record ring — recovery adopts them after verification,
@@ -569,6 +574,27 @@ def _reconstruct_hashmap(h: "Hashmap") -> dict:
         # check on struct Hashmap)
         hv[:] = 0
     fresh = int(hv[H_FRESH])
+    # salvage (DESIGN.md §13): entry rows failing their sidecar become
+    # volatile tombstones — the map recovers every verifiable entry and
+    # refuses the rest by key.  A corrupt VALUE word leaves the key
+    # word intact, so the quarantine names the real key; a corrupt KEY
+    # word degrades to row-level loss (the garbage key is recorded
+    # best-effort, and the structure is flagged degraded either way).
+    h.quarantined = set()
+    dropped = 0
+    if getattr(h.arena, "_salvage", False):
+        bad = _salvage_bad_rows(h.arena, h.entries)
+        bad = bad[bad < fresh]
+        if bad.size:
+            img = np.asarray(h.arena._pimage(h.entries))
+            for r in bad.tolist():
+                key = int(img[r, 0])
+                if key != KEY_NULL:
+                    h.quarantined.add(key)
+            was_live = int((h.keys[bad] != KEY_NULL).sum())
+            h.entries.vol[bad, 0] = KEY_NULL
+            hv[H_SIZE] = max(0, int(hv[H_SIZE]) - was_live)
+            dropped = int(bad.size)
     live = h.keys[:fresh] != KEY_NULL
     # SIZE -> derive bucket count (paper derives BUCKETCOUNT from SIZE)
     size = int(hv[H_SIZE])
@@ -577,8 +603,14 @@ def _reconstruct_hashmap(h: "Hashmap") -> dict:
     idx = np.nonzero(live)[0]
     h.hashes[idx] = hash64(h.keys[idx])
     detail = {"mode": h.mode, "size": size, "live": int(idx.size)}
+    if dropped:
+        detail.update(degraded=True, quarantined_rows=dropped,
+                      quarantined_keys=sorted(h.quarantined))
     snap_on = getattr(h, "snapshot", False)
-    replayed = _hm_snap_adopt(h, fresh, idx) if snap_on else None
+    # a salvaged map never adopts a snapshot (the mirrors may reference
+    # quarantined rows) — rebuild from the tombstoned slab instead
+    replayed = _hm_snap_adopt(h, fresh, idx) \
+        if snap_on and not dropped else None
     if replayed is None:
         h._rebuild_chains()
     if snap_on:

@@ -35,8 +35,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import reconstruct as rec
-from repro.core.arena import journal_enabled, open_arena
+from repro.core.arena import (CorruptLineError, QuarantinedError,
+                              journal_enabled, open_arena)
 from repro.core.recovery import RecoveryManager, RecoveryReport
+from repro.pstruct.dll import _salvage_bad_rows
 from repro.models.model import Model
 from repro.pstruct.hashmap import H_FRESH as HM_FRESH
 from repro.pstruct.hashmap import Hashmap
@@ -155,6 +157,9 @@ class ServingEngine:
         self._prefill = jax.jit(lambda p, b: model.prefill(
             p, b, s_max=cfg.s_max))
         self.last_recovery: Optional[RecoveryReport] = None
+        # rids lost to media corruption in the last salvage recovery:
+        # admission refuses them (QuarantinedError) until readmit()
+        self.quarantined_rids: set = set()
 
     # ------------------------------------------------------------------
     def _free_slot(self) -> int:
@@ -164,6 +169,10 @@ class ServingEngine:
         raise RuntimeError("no free slots")
 
     def add_request(self, rid: int, prompt: np.ndarray) -> int:
+        if int(rid) in self.quarantined_rids:
+            raise QuarantinedError(
+                f"request {rid} was lost to media corruption in the last "
+                "salvage recovery; readmit() it explicitly to resubmit")
         if self.journal is not None:
             st = self.journal.state_of(rid)
             if st != ST_NEVER:
@@ -317,8 +326,27 @@ class ServingEngine:
         self.slot_ready = np.zeros(self.cfg.max_batch, bool)
         self.arena.crash()
 
+    def readmit(self, rids) -> None:
+        """Abandon quarantined ``rids``: lift the admission gate and —
+        when journaling — close each rid's exactly-once accounting with
+        a COMPLETE descriptor (its effects are unrecoverable, so the
+        retry obligation is formally discharged; a resubmission is a
+        NEW request under a new rid, per the journal's dedup window)."""
+        rids = {int(r) for r in np.atleast_1d(rids)}
+        self.quarantined_rids -= rids
+        if self.journal is None:
+            return
+        stale = [r for r in sorted(rids)
+                 if r in self.journal._admit
+                 and r not in self.journal._complete]
+        if stale:
+            with self.arena.epoch():
+                for r in stale:
+                    self.journal.log(OP_COMPLETE, r, info=-1)
+                self.arena.commit()
+
     def recover(self, concurrency: int = 1,
-                on_stage=None) -> float:
+                on_stage=None, salvage: bool = False) -> float:
         """Paper-style recovery through the unified manager: reopen the
         arenas once, then reconstruct in dependency order — request
         hashmap + LRU chain (independent: one topological level), page
@@ -326,12 +354,20 @@ class ServingEngine:
         ``concurrency>1`` runs independent stages AND the engine's
         prefill groups in thread pools, and slots are re-admitted
         (``slot_ready``) group by group as their prefill lands.
-        Returns seconds; the staged RecoveryReport lands in
-        ``last_recovery``."""
+        ``salvage=True`` rides the manager's salvage mode (DESIGN.md
+        §13): corrupted stages quarantine instead of aborting, and rids
+        whose table entry or token-log row was lost land in
+        ``quarantined_rids`` — admission refuses exactly those until
+        ``readmit()``.  Returns seconds; the staged RecoveryReport
+        lands in ``last_recovery``."""
         self._recover_concurrency = max(1, int(concurrency))
+        # .jrnl rings load with the journal stage, .integ sidecars with
+        # the arena-level verify paths — neither belongs to the table's
+        # own load stage
         req_regions = tuple(n for n in self.arena.regions
                             if n.startswith("req.")
-                            and not n.endswith(".jrnl"))
+                            and not n.endswith(".jrnl")
+                            and not n.endswith(".integ"))
         mgr = RecoveryManager(self.arena, self.paging.arena)
         mgr.add("req_table", "pstruct.hashmap", self.table,
                 regions=req_regions)
@@ -351,8 +387,11 @@ class ServingEngine:
             eng_deps += ("journal",)
         mgr.add("engine", "serve.engine", self, depends=eng_deps,
                 regions=req_regions + ("tokens",))
-        report = mgr.recover(concurrency=concurrency, on_stage=on_stage)
+        report = mgr.recover(concurrency=concurrency, on_stage=on_stage,
+                             salvage=salvage)
         self.last_recovery = report
+        self.quarantined_rids = {
+            int(k) for k in getattr(self.table, "quarantined", ())}
         return report.total_seconds
 
 
@@ -384,6 +423,19 @@ def _reconstruct_engine(eng: "ServingEngine") -> dict:
     # valid rids are non-negative; KEY_NULL tombstones are negative too,
     # so one sign check covers both
     live = (keys >= 0) & (vals[:, V_ACTIVE] == 1)
+    salvage = bool(getattr(eng.arena, "_salvage", False))
+    lost_tok = 0
+    if salvage:
+        # token-log salvage: a corrupt slot row loses its request's
+        # prompt — the table entry is intact, so the rid quarantines by
+        # name and its slot frees for new work
+        bad_slots = _salvage_bad_rows(eng.arena, eng.tok_region)
+        if bad_slots.size:
+            hit = live & np.isin(vals[:, V_SLOT], bad_slots)
+            eng.table.quarantined.update(int(k) for k in keys[hit])
+            live = live & ~hit
+            lost_tok = int(hit.sum())
+    lost = set(getattr(eng.table, "quarantined", ()))
     if eng.journal is not None:
         # the journal's must-retry set and the table's live set are two
         # independent persisted records of the same fact; the shared
@@ -392,11 +444,21 @@ def _reconstruct_engine(eng: "ServingEngine") -> dict:
         # loudly instead of double-admitting (DESIGN.md §11)
         retry = eng.journal.must_retry()
         table_live = {int(k) for k in keys[live]}
+        if salvage and lost:
+            # rids cut out by salvage are EXPECTED to diverge: the
+            # journal still remembers admissions the table lost
+            retry = retry - lost
+            table_live = table_live - lost
         if retry != table_live:
-            raise RuntimeError(
-                "journal/table divergence after recovery: journal "
-                f"must-retry={sorted(retry)} vs table live="
-                f"{sorted(table_live)}")
+            msg = ("journal/table divergence after recovery: journal "
+                   f"must-retry={sorted(retry)} vs table live="
+                   f"{sorted(table_live)}")
+            if salvage:
+                # residual divergence IS corruption — quarantine the
+                # engine stage rather than abort the whole recovery
+                raise CorruptLineError("req.jrnl", np.empty(0, np.int64),
+                                       detail=msg)
+            raise RuntimeError(msg)
     slots = vals[live, V_SLOT]
     tlens = vals[live, V_TLEN]
     eng.slot_rid[slots] = keys[live]
@@ -429,14 +491,18 @@ def _reconstruct_engine(eng: "ServingEngine") -> dict:
             admissions = list(ex.map(prefill_group, groups))
     else:
         admissions = [prefill_group(g) for g in groups]
-    return {"requests": int(live.sum()),
-            "prefill_groups": len(groups),
-            "shard_groups": int(np.unique(shards).size) if slots.size
-            else 0,
-            "first_admission_s": round(min(admissions), 6)
-            if admissions else 0.0,
-            "last_admission_s": round(max(admissions), 6)
-            if admissions else 0.0}
+    out = {"requests": int(live.sum()),
+           "prefill_groups": len(groups),
+           "shard_groups": int(np.unique(shards).size) if slots.size
+           else 0,
+           "first_admission_s": round(min(admissions), 6)
+           if admissions else 0.0,
+           "last_admission_s": round(max(admissions), 6)
+           if admissions else 0.0}
+    if lost:
+        out.update(degraded=True, quarantined_rids=sorted(lost),
+                   lost_token_rows=lost_tok)
+    return out
 
 
 def _scatter_batch(full, grp, idx, ax):

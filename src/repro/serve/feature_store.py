@@ -34,10 +34,12 @@ from typing import Optional
 import numpy as np
 
 from repro.core import reconstruct as rec
-from repro.core.arena import journal_enabled, open_arena
+from repro.core.arena import (CorruptLineError, QuarantinedError,
+                              journal_enabled, open_arena)
 from repro.core.recovery import RecoveryManager
 from repro.pstruct.bptree import BPTree
-from repro.pstruct.hashmap import Hashmap
+from repro.pstruct.hashmap import KEY_NULL, Hashmap
+from repro.pstruct.hashmap import H_FRESH as HM_FRESH
 from repro.serve.journal import (OP_APPLY, ST_NEVER, RequestJournal,
                                  args_digest)
 
@@ -97,6 +99,9 @@ class FeatureStore:
         self.counts = np.zeros(cfg.n_keys, np.int64)
         self.next_sample = 0
         self.last_recovery = None
+        # keys whose state was lost to media corruption in the last
+        # salvage recovery: lookup/apply refuse them until readmit()
+        self.quarantined_keys: set = set()
 
     # ------------------------------------------------------------- write
     def apply(self, rid: int, keys, deltas, _torn_crash: bool = False
@@ -115,6 +120,7 @@ class FeatureStore:
                                                       self.cfg.dim)
         assert len(np.unique(keys)) == len(keys), \
             "apply expects unique keys per request"
+        self._refuse_quarantined(keys)
         if self.journal is not None and \
                 self.journal.state_of(rid) != ST_NEVER:
             return False
@@ -161,10 +167,29 @@ class FeatureStore:
         self.next_sample += len(keys)
         return True
 
+    def _refuse_quarantined(self, keys) -> None:
+        if not self.quarantined_keys:
+            return
+        bad = sorted(int(k) for k in np.atleast_1d(keys)
+                     if int(k) in self.quarantined_keys)
+        if bad:
+            raise QuarantinedError(
+                f"keys {bad} were lost to media corruption in the last "
+                "salvage recovery; readmit() them to start fresh")
+
+    def readmit(self, keys) -> None:
+        """Lift the quarantine on ``keys``: the caller accepts that the
+        lost history is gone and wants the keys writable again (their
+        accumulators restart from the salvaged committed state)."""
+        self.quarantined_keys -= {int(k) for k in np.atleast_1d(keys)}
+
     # -------------------------------------------------------------- read
     def lookup(self, keys) -> np.ndarray:
-        """Dense embedding rows for ``keys`` (zeros for absent keys)."""
+        """Dense embedding rows for ``keys`` (zeros for absent keys).
+        Raises QuarantinedError if any key's state was lost to media
+        corruption in the last salvage recovery."""
         keys = np.asarray(keys, np.int64)
+        self._refuse_quarantined(keys)
         slots = self.table._find_slots(keys)
         out = np.zeros((len(keys), self.cfg.dim), np.int64)
         ok = slots >= 0
@@ -178,13 +203,16 @@ class FeatureStore:
         self.next_sample = 0
         self.arena.crash()
 
-    def recover(self, concurrency: int = 1, on_stage=None):
+    def recover(self, concurrency: int = 1, on_stage=None,
+                salvage: bool = False):
         mgr = RecoveryManager(self.arena)
         emb_regions = tuple(n for n in self.arena.regions
                             if n.startswith("emb.")
-                            and not n.endswith(".jrnl"))
+                            and not n.endswith(".jrnl")
+                            and not n.endswith(".integ"))
         sx_regions = tuple(n for n in self.arena.regions
-                           if n.startswith("sx."))
+                           if n.startswith("sx.")
+                           and not n.endswith(".integ"))
         mgr.add("emb", "pstruct.hashmap", self.table, regions=emb_regions)
         mgr.add("samples", "pstruct.bptree", self.tree, regions=sx_regions)
         deps = ("emb", "samples")
@@ -194,8 +222,14 @@ class FeatureStore:
             deps += ("journal",)
         mgr.add("store", "serve.feature_store", self, depends=deps,
                 regions=())
-        report = mgr.recover(concurrency=concurrency, on_stage=on_stage)
+        report = mgr.recover(concurrency=concurrency, on_stage=on_stage,
+                             salvage=salvage)
         self.last_recovery = report
+        if salvage:
+            # belt and braces: even if the store stage was skipped
+            # (quarantined dependency), table-level losses still gate
+            self.quarantined_keys |= {
+                int(k) for k in getattr(self.table, "quarantined", ())}
         return report
 
 
@@ -216,30 +250,65 @@ def _reconstruct_feature_store(fs: FeatureStore) -> dict:
     keys ARE corruption: fail loudly (detectability over silent
     drift)."""
     cfg = fs.cfg
+    salvage = bool(getattr(fs.arena, "_salvage", False))
+    fs.quarantined_keys = ({int(k) for k in
+                            getattr(fs.table, "quarantined", ())}
+                           if salvage else set())
     fs.vectors = np.zeros((cfg.n_keys, cfg.dim), np.int64)
     fs.counts = np.zeros(cfg.n_keys, np.int64)
     fs.next_sample = int(fs.table.header.vol[0, FS_CURSOR])
     if not 0 <= fs.next_sample <= cfg.n_samples:
+        if salvage:
+            raise CorruptLineError(
+                "emb.header", np.array([0], np.int64),
+                detail=f"committed sample cursor {fs.next_sample} "
+                       "out of range")
         raise RuntimeError(
             f"committed sample cursor {fs.next_sample} out of range")
-    replayed = 0
+    replayed = missing = 0
     if fs.next_sample:
         sids = np.arange(fs.next_sample, dtype=np.int64)
         ok, recs = fs.tree.find_batch(sids)
         if not ok.all():
-            raise RuntimeError(
-                f"sample log has holes: {int((~ok).sum())} missing ids")
+            if not salvage:
+                raise RuntimeError(
+                    f"sample log has holes: {int((~ok).sum())} "
+                    "missing ids")
+            # salvage: quarantined/lost log records replay as holes —
+            # the per-key count cross-check below names the losers
+            missing = int((~ok).sum())
+            recs = recs[ok]
         keys = recs[:, 0]
         slots = fs.table._find_slots(keys)
         if (slots < 0).any():
-            raise RuntimeError(
-                "sample log names keys absent from the committed table")
+            if not salvage:
+                raise RuntimeError(
+                    "sample log names keys absent from the committed "
+                    "table")
+            # the table lost these keys (row quarantined): their log
+            # records survive and name them precisely
+            fs.quarantined_keys.update(int(k) for k in keys[slots < 0])
+            keep = slots >= 0
+            recs, slots = recs[keep], slots[keep]
         np.add.at(fs.vectors, slots, recs[:, 1:1 + cfg.dim])
         np.add.at(fs.counts, slots, 1)
-        replayed = int(sids.size)
+        replayed = int(slots.size) if salvage else int(sids.size)
+    if salvage:
+        # cross-check: the table's committed per-key apply counters vs
+        # the replayed ones — any key whose samples were lost (the log
+        # record was corrupt, so the key inside it is unreadable) shows
+        # up as a counter shortfall and quarantines BY NAME here
+        fresh = int(fs.table.header.vol[0, HM_FRESH])
+        tk = np.asarray(fs.table.keys[:fresh], np.int64)
+        tv = np.asarray(fs.table.values[:fresh], np.int64)
+        bad = (tk != KEY_NULL) & (tv[:, 0] != fs.counts[:fresh])
+        fs.quarantined_keys.update(int(k) for k in tk[bad])
     detail = {"samples": replayed, "keys": int(fs.table.size)}
     if fs.journal is not None:
         cls = fs.journal.classify()
         detail["journal_completed"] = sum(
             1 for s in cls.values() if s == "completed")
+    if salvage and (fs.quarantined_keys or missing):
+        detail.update(degraded=True, missing_samples=missing,
+                      quarantined_keys=sorted(fs.quarantined_keys))
     return detail

@@ -53,7 +53,7 @@ from typing import Dict, Optional, Set
 import numpy as np
 
 from repro.core import reconstruct as rec
-from repro.core.arena import _splitmix64, snap_checksum
+from repro.core.arena import _splitmix64, mix_checksums, snap_checksum
 
 JR_MAGIC = 0x4C4E524A            # "JRNL" little-endian
 JR_WORDS = 8                     # int64 words per entry = one 64 B line
@@ -230,10 +230,11 @@ class RequestJournal:
 
 
 def _batch_cksum(rows: np.ndarray) -> np.ndarray:
-    """Vectorized snap_checksum over (n, 8) entry rows."""
-    w = rows[:, :7].astype(np.uint64)
-    mixed = _splitmix64(w + np.arange(1, 8, dtype=np.uint64)[None, :])
-    return np.bitwise_xor.reduce(mixed, axis=1).astype(np.int64)
+    """Vectorized snap_checksum over (n, 8) entry rows — the shared
+    ``mix_checksums`` mixer (DESIGN.md §13) over the first 7 words, so
+    journal slots, snapshot records, and integrity sidecars all speak
+    one checksum."""
+    return mix_checksums(np.asarray(rows, np.int64)[:, :7])
 
 
 @rec.register("serve.journal")

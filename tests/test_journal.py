@@ -289,7 +289,10 @@ def test_journal_off_layout_and_traffic_identical():
     for name, r_off in off.arena.regions.items():
         r_on = on.arena.regions[name]
         assert r_on.shape == r_off.shape
-        if hasattr(r_on, "offset"):
+        # integrity sidecars are appended AFTER every declared region
+        # (DESIGN.md §13), so the journal regions legitimately shift
+        # them; every declared region must sit at an unchanged offset
+        if hasattr(r_on, "offset") and not name.endswith(".integ"):
             assert r_on.offset == r_off.offset, name
     s_on, s_off = on.arena.stats.snapshot(), off.arena.stats.snapshot()
     _fs_workload(on)
